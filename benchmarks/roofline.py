@@ -1,0 +1,101 @@
+"""Roofline analysis per (arch × shape × mesh) from the dry-run artifacts.
+
+Three terms per cell (per-device, v5e constants):
+  compute    = HLO_FLOPs / peak_FLOP/s          (197 TF/s bf16)
+  memory     = HLO_traffic_bytes / HBM_bw       (819 GB/s)
+  collective = collective_wire_bytes / link_bw  (50 GB/s/link)
+
+HLO_FLOPs / traffic / collective bytes are the trip-count-aware per-device
+numbers from repro.launch.hlo_analysis (raw XLA cost_analysis counts scan
+bodies once — see EXPERIMENTS.md §Dry-run notes).  Also reported:
+MODEL_FLOPS = 6·N_active·D and its ratio to HLO_FLOPs (remat/redundancy
+visibility), and a one-line "what would move the dominant term".
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+from repro.core.peaks import TPU_V5E
+
+# prefer the optimized-layout artifacts when present (the §Perf "after");
+# the paper-faithful baseline table lives in experiments/dryrun and
+# EXPERIMENTS.md §Roofline
+_DEFAULT = ("experiments/dryrun_opt"
+            if os.path.isdir("experiments/dryrun_opt")
+            else "experiments/dryrun")
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", _DEFAULT)
+
+
+def roofline_terms(rec: dict) -> dict:
+    chips = rec["devices"]
+    peak = TPU_V5E.peak_tflops("bf16") * 1e12
+    hbm = TPU_V5E.hbm_gbps * 1e9
+    link = TPU_V5E.ici_gbps * 1e9
+
+    flops_dev = rec["hlo"]["flops"]
+    bytes_dev = rec["hlo"]["traffic_bytes"]
+    coll_dev = sum(rec["hlo"]["collective_bytes"].values())
+
+    compute_s = flops_dev / peak
+    memory_s = bytes_dev / hbm
+    coll_s = coll_dev / link
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    bound = max(compute_s, memory_s, coll_s)
+
+    model_flops = rec["model_flops_6nd"]
+    # useful fraction: model FLOPs per device vs compiled FLOPs per device
+    useful = (model_flops / chips) / flops_dev if flops_dev else 0.0
+    # roofline fraction: time the useful math needs at peak / bound time
+    frac = ((model_flops / chips) / peak) / bound if bound else 0.0
+    return {**terms, "dominant": dom, "bound_s": bound,
+            "model_flops": model_flops, "useful_ratio": useful,
+            "roofline_fraction": frac,
+            "peak_mem_gib": rec["memory"]["peak_bytes"] / 2 ** 30}
+
+
+_ADVICE = {
+    "compute_s": "lower executed FLOPs: cut remat recompute / padded tiles",
+    "memory_s": "cut HBM traffic: fuse casts, shrink fp32 intermediates, "
+                "bigger microbatch reuse",
+    "collective_s": "restructure sharding: fewer/overlapped all-gathers, "
+                    "reduce-scatter grads, SP boundary placement",
+}
+
+
+def run() -> list[Row]:
+    rows = []
+    cells = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not cells:
+        return [Row("roofline.missing", 0.0,
+                    f"no dry-run artifacts in {DRYRUN_DIR}; run "
+                    "python -m repro.launch.dryrun --all --both-meshes")]
+    for path in cells:
+        with open(path) as f:
+            rec = json.load(f)
+        tag = os.path.basename(path)[:-5]
+        if rec.get("skipped"):
+            rows.append(Row(f"roofline.{tag}", 0.0, "skipped (sub-quadratic "
+                            "rule, DESIGN.md)"))
+            continue
+        t = roofline_terms(rec)
+        rows.append(Row(
+            f"roofline.{tag}", 0.0,
+            f"compute={t['compute_s'] * 1e3:.2f}ms "
+            f"memory={t['memory_s'] * 1e3:.2f}ms "
+            f"collective={t['collective_s'] * 1e3:.2f}ms "
+            f"dominant={t['dominant'].replace('_s', '')} "
+            f"roofline_frac={t['roofline_fraction'] * 100:.1f}% "
+            f"useful={t['useful_ratio'] * 100:.1f}% "
+            f"mem={t['peak_mem_gib']:.1f}GiB | "
+            f"{_ADVICE[t['dominant']]}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,44 @@
+"""Controlled-GEMM characterization (paper §IV) against the live Pallas
+kernel: tile quantization, block-policy selection, and the adjusted-OFU
+pipeline — executed for real in interpret mode.
+
+  PYTHONPATH=src python examples/gemm_characterization.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ofu import adjusted_ofu
+from repro.core.tile_quant import pick_policy
+from repro.kernels import ops
+
+SHAPES = [(300, 200, 150), (512, 512, 512), (640, 1000, 480),
+          (1100, 900, 700)]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print(f"{'M,N,K':>16s} {'policy':>12s} {'FLOPs 2MNK':>12s} "
+          f"{'executed':>12s} {'overhead':>9s} {'OFU':>6s} {'adjOFU':>7s}")
+    for M, N, K in SHAPES:
+        x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        out, prof = ops.matmul(x, y)
+        # pretend the device reported 60% duty at 97% clock while running
+        # this shape: raw OFU includes padded-tile work; Eq. 8 removes it
+        raw_ofu = 0.60 * 0.97 * 100
+        adj = adjusted_ofu(raw_ofu, prof.theoretical_flops,
+                           prof.profiled_flops)
+        print(f"{f'{M},{N},{K}':>16s} {prof.policy.name:>12s} "
+              f"{prof.theoretical_flops:>12,d} {prof.profiled_flops:>12,d} "
+              f"{prof.overhead * 100:>8.2f}% {raw_ofu:>5.1f}% {adj:>6.1f}%")
+    print("\nexecuted FLOPs are exact: the Pallas grid is static "
+          "(closed form == grid, 0-FLOP error; cf. paper's <1000-FLOP nvJet "
+          "match).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES, ModelConfig, ShapeSpec, cache_specs, get_config, input_specs,
+    list_configs, make_inputs, register,
+)

@@ -1,0 +1,104 @@
+"""Overall FLOP Utilization (OFU) — the paper's core metric, Eq. 1/8/9/12.
+
+OFU consumes ONLY hardware-counter streams (matrix-pipe duty cycle + clock
+point samples); it never sees model architecture.  Everything model-aware
+(App MFU, FLOPs counters) lives in repro.flops — keeping the paper's trust
+boundary between the two estimators.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.peaks import DEFAULT_CHIP, ChipSpec
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1: OFU = TPA × f / f_max
+# ---------------------------------------------------------------------------
+def ofu_point(tpa: float, clock_mhz: float,
+              chip: ChipSpec = DEFAULT_CHIP) -> float:
+    """One OFU reading from one (TPA, clock) counter pair, in [0, 1]."""
+    return float(tpa) * float(clock_mhz) / chip.f_max_mhz
+
+
+def ofu_series(tpa: np.ndarray, clock_mhz: np.ndarray,
+               chip: ChipSpec = DEFAULT_CHIP) -> np.ndarray:
+    """Eq. 11: element-wise OFU over aligned counter series."""
+    return np.asarray(tpa, float) * np.asarray(clock_mhz, float) / chip.f_max_mhz
+
+
+def ofu_mean(tpa: np.ndarray, clock_mhz: np.ndarray,
+             chip: ChipSpec = DEFAULT_CHIP) -> float:
+    """Job-level OFU: mean over all devices × time samples (paper Eq. 11)."""
+    return float(np.mean(ofu_series(tpa, clock_mhz, chip)))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 8: tile-quantization-adjusted OFU
+# ---------------------------------------------------------------------------
+def adjusted_ofu(ofu: float, theoretical_flops: float,
+                 profiled_flops: float) -> float:
+    """OFU_adj = OFU × FLOPs_theoretical / FLOPs_profiled."""
+    if profiled_flops <= 0:
+        return ofu
+    return ofu * theoretical_flops / profiled_flops
+
+
+# ---------------------------------------------------------------------------
+# Eq. 12: effective peak for mixed precision (FLOPs-weighted harmonic mean)
+# ---------------------------------------------------------------------------
+def effective_peak(flops_by_precision: dict[str, float],
+                   chip: ChipSpec = DEFAULT_CHIP) -> float:
+    """P_eff = Σ F_i / Σ (F_i / P_i) in TFLOP/s."""
+    num = sum(flops_by_precision.values())
+    den = sum(f / chip.peak_tflops(p)
+              for p, f in flops_by_precision.items() if f > 0)
+    return num / den if den else chip.peak_tflops()
+
+
+def mfu_from_throughput(tflops_per_chip: float, peak_tflops: float) -> float:
+    """Eq. 10 (normalized to one chip): achieved / peak."""
+    return tflops_per_chip / peak_tflops
+
+
+# ---------------------------------------------------------------------------
+# Eq. 9 + §V-A accuracy statistics
+# ---------------------------------------------------------------------------
+def mae(estimates: Sequence[float], truth: Sequence[float]) -> float:
+    e, t = np.asarray(estimates, float), np.asarray(truth, float)
+    return float(np.mean(np.abs(e - t)))
+
+
+def pct_within(estimates: Sequence[float], truth: Sequence[float],
+               bound_pp: float) -> float:
+    """Fraction of samples with |error| <= bound (same units as inputs)."""
+    e, t = np.asarray(estimates, float), np.asarray(truth, float)
+    return float(np.mean(np.abs(e - t) <= bound_pp))
+
+
+def pearson_r(a: Sequence[float], b: Sequence[float]) -> float:
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    a = a - a.mean()
+    b = b - b.mean()
+    den = np.sqrt((a * a).sum() * (b * b).sum())
+    return float((a * b).sum() / den) if den else 0.0
+
+
+@dataclass
+class AccuracyReport:
+    """Summary row of paper Table II."""
+
+    estimator: str
+    mae_pp: float
+    within_2pp: float
+    within_5pp: float
+
+    @classmethod
+    def build(cls, name: str, est_pct: Sequence[float],
+              truth_pct: Sequence[float]) -> "AccuracyReport":
+        return cls(name, mae(est_pct, truth_pct),
+                   pct_within(est_pct, truth_pct, 2.0),
+                   pct_within(est_pct, truth_pct, 5.0))

@@ -1,0 +1,1 @@
+from repro.data.pipeline import Prefetcher, synthetic_batch  # noqa: F401

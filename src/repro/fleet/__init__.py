@@ -1,0 +1,9 @@
+from repro.fleet.divergence import DivergenceReport, JobPoint, analyze  # noqa: F401
+from repro.fleet.goodput import FleetRollup, rollup  # noqa: F401
+from repro.fleet.jobs import (  # noqa: F401
+    JobSpec, JobTelemetry, build_profile, simulate_job,
+)
+from repro.fleet.recovery import (  # noqa: F401
+    RecoveryAction, RecoveryService, StragglerMonitor,
+)
+from repro.fleet.regression import Regression, detect_regressions  # noqa: F401

@@ -1,0 +1,122 @@
+"""Fleet job model: ties a (config, shape) workload to telemetry + app MFU.
+
+A `JobSpec` describes one production job the way the fleet sees it: chips,
+architecture, which FLOPs counter its framework uses (including the buggy
+variants of paper §V-C), precision mix, and its *true* efficiency (duty
+cycle) — which the fleet does NOT observe directly.  `simulate_job` produces
+what the fleet DOES observe: hardware-counter scrapes per device, and the
+application-reported MFU computed from the (possibly wrong) FLOPs counter.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import SHAPES, ShapeSpec, get_config
+from repro.core.ofu import effective_peak, ofu_mean
+from repro.core.peaks import DEFAULT_CHIP, ChipSpec
+from repro.core.tile_quant import pick_policy, profiled_flops, theoretical_flops
+from repro.flops.accounting import step_flops
+from repro.telemetry.counters import Event, SimulatedDeviceBackend, StepProfile
+from repro.telemetry.scrape import ScrapeSeries, scrape
+
+
+@dataclass
+class JobSpec:
+    job_id: str
+    arch: str
+    shape: str = "train_4k"
+    chips: int = 256
+    user: str = "researcher"
+    flops_variant: str = "exact"     # exact | naive_moe | naive_hybrid | ...
+    precisions: dict = field(default_factory=lambda: {"bf16": 1.0})
+    true_duty: float = 0.35          # ground-truth MXU duty cycle
+    duration_s: float = 600.0
+    scrape_interval_s: float = 30.0
+    events: Sequence[Event] = ()
+    straggler_sigma: float = 0.0     # per-device step-time spread
+    seed: int = 0
+    chip: ChipSpec = DEFAULT_CHIP
+    # remat=True is the §VI-C world-model case (hardware executes 4F while
+    # the app counter bills 3F); the default fleet job runs without it.
+    remat: bool = False
+
+
+@dataclass
+class JobTelemetry:
+    spec: JobSpec
+    device_series: list                # per sampled device: ScrapeSeries
+    app_mfu: float                     # what the framework reports (Eq. 10)
+    app_mfu_exact: float               # with a correct FLOPs counter
+    step_time_s: float
+    executed_tflops_per_step: float
+
+    @property
+    def ofu(self) -> float:
+        """Job-level OFU per Eq. 11 (mean over devices × samples)."""
+        vals = [ofu_mean(s.tpa, s.clock_mhz, self.spec.chip)
+                for s in self.device_series]
+        return float(np.mean(vals))
+
+
+def _tile_quant_factor(cfg, chip: ChipSpec) -> float:
+    """Mean executed/theoretical FLOPs ratio for the job's dominant GEMMs."""
+    d = cfg.d_model
+    shapes = [(4096, d, d), (4096, cfg.d_ff or d, d)]
+    f = [profiled_flops(m, n, k, pick_policy(m, n, k))
+         / theoretical_flops(m, n, k) for m, n, k in shapes]
+    return float(np.mean(f))
+
+
+def build_profile(spec: JobSpec) -> tuple[StepProfile, float, float]:
+    """Derive the per-device step profile + app-reported MFUs for a job."""
+    cfg = get_config(spec.arch)
+    shape = SHAPES[spec.shape]
+    chip = spec.chip
+
+    exact = step_flops(cfg, shape, variant="exact", executed=False,
+                       remat=spec.remat)
+    executed = step_flops(cfg, shape, variant="exact", executed=True,
+                          remat=spec.remat)
+    reported = step_flops(cfg, shape, variant=spec.flops_variant,
+                          executed=False, remat=spec.remat)
+
+    tq = _tile_quant_factor(cfg, chip)
+    executed_mxu = executed.total_mxu * tq
+
+    peak_eff = effective_peak(spec.precisions, chip)      # TFLOP/s per chip
+    fleet_peak = peak_eff * 1e12 * spec.chips
+    mxu_time = executed_mxu / fleet_peak                  # at full clock
+    step_time = mxu_time / max(spec.true_duty, 1e-3)
+
+    # App MFU (Eq. 10): reported FLOPs / (step_time × chips × peak).
+    # NOTE the counter convention: app counters bill 3F (no remat term) —
+    # exactly the §VI-C miscount when remat is on, unless the variant fixes it.
+    app = reported.total_mxu / (step_time * fleet_peak)
+    app_exact = exact.total_mxu / (step_time * fleet_peak)
+    prof = StepProfile(mxu_time_s=mxu_time, step_time_s=step_time,
+                       flops_by_precision={
+                           p: executed_mxu * f
+                           for p, f in spec.precisions.items()})
+    return prof, float(app), float(app_exact)
+
+
+def simulate_job(spec: JobSpec, max_devices: int = 4) -> JobTelemetry:
+    """Run the counter simulation for a few representative devices."""
+    prof, app, app_exact = build_profile(spec)
+    rng = np.random.default_rng(spec.seed)
+    n_dev = min(spec.chips, max_devices)
+    series = []
+    for d in range(n_dev):
+        straggle = float(np.exp(rng.standard_normal()
+                                * spec.straggler_sigma))
+        be = SimulatedDeviceBackend(
+            prof, chip=spec.chip, events=spec.events,
+            straggler_factor=straggle,
+            seed=int(rng.integers(0, 2 ** 31)))
+        series.append(scrape(be, spec.duration_s, spec.scrape_interval_s))
+    executed_tflops = sum(prof.flops_by_precision.values()) / 1e12
+    return JobTelemetry(spec, series, app, app_exact, prof.step_time_s,
+                        executed_tflops)

@@ -1,0 +1,84 @@
+"""Autonomous job recovery service (paper §VI-B: Mission Control analogue).
+
+Consumes per-job OFU streams; on a sustained collapse below an absolute
+floor or a relative regression, issues a recovery action.  The trainer
+(repro.train.trainer) registers a callback so the action actually restarts
+from the latest checkpoint — closing the loop the paper describes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.fleet.regression import detect_regressions
+
+
+@dataclass
+class RecoveryAction:
+    job_id: str
+    reason: str
+    at_sample: int
+    factor: float
+
+
+@dataclass
+class RecoveryService:
+    """Policy: restart when OFU collapses by `factor_threshold` for
+    `sustain_samples` consecutive scrapes, or drops below `abs_floor`."""
+
+    factor_threshold: float = 2.0
+    abs_floor: float = 0.02
+    sustain_samples: int = 5
+    cooldown_samples: int = 20
+    on_recover: Optional[Callable[[RecoveryAction], None]] = None
+    _history: dict = field(default_factory=dict)
+    _last_action: dict = field(default_factory=dict)
+    actions: list = field(default_factory=list)
+
+    def observe(self, job_id: str, ofu: float) -> Optional[RecoveryAction]:
+        h = self._history.setdefault(job_id, [])
+        h.append(float(ofu))
+        i = len(h) - 1
+        if i - self._last_action.get(job_id, -10 ** 9) < self.cooldown_samples:
+            return None
+        if len(h) < 2 * self.sustain_samples:
+            return None
+        recent = h[-self.sustain_samples:]
+        action = None
+        if all(v < self.abs_floor for v in recent):
+            action = RecoveryAction(job_id, "ofu_below_floor", i,
+                                    factor=float("inf"))
+        else:
+            regs = detect_regressions(
+                np.array(h), factor_threshold=self.factor_threshold,
+                min_duration=self.sustain_samples)
+            if regs and regs[-1].end_idx is None:
+                action = RecoveryAction(job_id, "sustained_regression", i,
+                                        factor=regs[-1].factor)
+        if action is not None:
+            self._last_action[job_id] = i
+            self.actions.append(action)
+            if self.on_recover is not None:
+                self.on_recover(action)
+        return action
+
+
+@dataclass
+class StragglerMonitor:
+    """Per-device duty-cycle spread -> straggler flags (fleet resilience).
+
+    A device whose duty cycle sits `sigma_threshold` robust-σ below the job
+    median is flagged — the restart/replace decision input at 1000+ nodes.
+    """
+
+    sigma_threshold: float = 4.0
+
+    def flag(self, per_device_tpa: np.ndarray) -> list[int]:
+        x = np.asarray(per_device_tpa, float)
+        med = np.median(x)
+        mad = np.median(np.abs(x - med)) + 1e-9
+        z = (x - med) / (1.4826 * mad)
+        return [int(i) for i in np.nonzero(z < -self.sigma_threshold)[0]]

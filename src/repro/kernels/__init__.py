@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling).
+
+gemm             — MXU-tiled GEMM; static grid = exact FLOPs_profiled oracle
+flash_attention  — online-softmax attention (train/prefill fast path)
+ssd_scan         — Mamba2 SSD intra-chunk block
+ops              — jit'd wrappers (padding, GemmProfile metadata)
+ref              — pure-jnp oracles for the allclose tests
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,103 @@
+"""Pallas flash attention (TPU fast path for train/prefill attention).
+
+Grid: (batch·kv_heads, q_blocks, kv_blocks) with the online-softmax carry
+(m, l, acc) in VMEM scratch; kv is the innermost (sequential) grid axis.
+GQA is handled by blocking q over (KV, G) head groups so each kv head's
+key/value block is loaded once per q block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  kv_steps: int, bq: int, bkv: int, scale: float,
+                  causal: bool):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (G, bq, hd)
+    k = k_ref[0]                       # (bkv, hd)
+    v = v_ref[0]                       # (bkv, hd)
+    s = jax.lax.dot_general(
+        q, k, (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (G, bq, bkv)
+
+    if causal:
+        qi = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], bq, bkv), 1)
+        kj = j * bkv + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], bq, bkv), 2)
+        s = jnp.where(qi >= kj, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    acc_ref[...] = (acc_ref[...] * corr[..., None]
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((2,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(j == kv_steps - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool, scale: float | None = None,
+                           bq: int = 256, bkv: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd), H % KV == 0.
+
+    Requires Sq % bq == 0 and Sk % bkv == 0 (callers pad).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    assert Sq % bq == 0 and Sk % bkv == 0
+
+    # (B·KV, G, Sq, hd) query layout; kv: (B·KV, Sk, hd)
+    qr = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * KV, G, Sq, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    grid = (B * KV, Sq // bq, Sk // bkv)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kv_steps=grid[2], bq=bq, bkv=bkv,
+                          scale=scale, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, bq, hd), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, bq, hd), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, KV, G, Sq, hd).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, Sq, H, hd)

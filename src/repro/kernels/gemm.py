@@ -1,0 +1,77 @@
+"""MXU-tiled Pallas GEMM — the controlled workload of paper §IV.
+
+The kernel computes C = A @ B over an explicit (M/tm, N/tn, K/tk) grid with
+fp32 (or int32) accumulation in VMEM scratch.  ops.py zero-pads operands up
+to tile multiples before the call — tile quantization made *literal*: the
+hardware (or interpreter) really executes 2·M_eff·N_eff·K_eff FLOPs, and the
+static grid is the exact "NCU" ground truth for FLOPs_profiled.
+
+Block shapes come from repro.core.tile_quant.TilePolicy — the library-layer
+policy axis that replaces cuBLAS kernel-family selection (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tile_quant import TilePolicy
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm_padded(x: jax.Array, y: jax.Array, policy: TilePolicy, *,
+                out_dtype=None, interpret: bool = False) -> jax.Array:
+    """GEMM on tile-aligned operands.  x: (M_eff, K_eff); y: (K_eff, N_eff).
+
+    Shapes MUST already be multiples of (tm, tk) / (tk, tn) — ops.matmul
+    does the Eq. 3 padding and records the executed-FLOPs metadata.
+    """
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, (K, K2)
+    tm, tn, tk = policy.tm, policy.tn, policy.tk
+    assert M % tm == 0 and N % tn == 0 and K % tk == 0, \
+        (M, N, K, tm, tn, tk)
+    grid = (M // tm, N // tn, K // tk)
+
+    acc_dtype = jnp.int32 if x.dtype == jnp.int8 else jnp.float32
+    out_dtype = out_dtype or (jnp.int32 if x.dtype == jnp.int8 else x.dtype)
+
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), acc_dtype)],
+        interpret=interpret,
+    )(x, y)
+
+
+def grid_flops(M: int, N: int, K: int, policy: TilePolicy) -> int:
+    """Executed FLOPs implied by the static grid (the closed-form oracle)."""
+    tm, tn, tk = policy.tm, policy.tn, policy.tk
+    m_tiles = -(-M // tm)
+    n_tiles = -(-N // tn)
+    me = -(-m_tiles // policy.cm) * policy.cm * tm
+    ne = -(-n_tiles // policy.cn) * policy.cn * tn
+    ke = -(-K // tk) * tk
+    return 2 * me * ne * ke

@@ -1,0 +1,164 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each wrapper handles tile-quantization padding (Eq. 3: operands are
+zero-padded up to BlockSpec multiples and the padded tiles are genuinely
+computed), records the executed-FLOPs metadata the OFU pipeline consumes,
+and selects interpret mode automatically off-TPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tile_quant import TilePolicy, pick_policy
+from repro.kernels import flash_attention as fa
+from repro.kernels import gemm as gemm_mod
+from repro.kernels import ssd_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@dataclass(frozen=True)
+class GemmProfile:
+    """The per-GEMM record an NCU-style profile would give (paper §IV-A)."""
+
+    M: int
+    N: int
+    K: int
+    policy: TilePolicy
+    theoretical_flops: int
+    profiled_flops: int
+
+    @property
+    def overhead(self) -> float:
+        return (self.profiled_flops - self.theoretical_flops) \
+            / self.theoretical_flops
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = -x.shape[0] % m0
+    p1 = -x.shape[1] % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def matmul(x: jax.Array, y: jax.Array, *,
+           policy: Optional[TilePolicy] = None,
+           dtype_name: Optional[str] = None,
+           interpret: Optional[bool] = None
+           ) -> tuple[jax.Array, GemmProfile]:
+    """C = x @ y through the Pallas kernel, with tile-quantization padding.
+
+    Returns (C, GemmProfile) — profile.profiled_flops is exact (static grid).
+    """
+    M, K = x.shape
+    _, N = y.shape
+    dtype_name = dtype_name or {"bfloat16": "bf16", "float32": "fp32",
+                                "int8": "int8"}.get(x.dtype.name, "bf16")
+    policy = policy or pick_policy(M, N, K, dtype_name)
+    interpret = _interpret() if interpret is None else interpret
+
+    xp = _pad_to(x, policy.tm * policy.cm, policy.tk)
+    yp = _pad_to(y, policy.tk, policy.tn * policy.cn)
+    out = _matmul_call(xp, yp, policy, interpret)
+    prof = GemmProfile(M, N, K, policy, 2 * M * N * K,
+                       gemm_mod.grid_flops(M, N, K, policy))
+    return out[:M, :N], prof
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def _matmul_call(xp, yp, policy, interpret):
+    return gemm_mod.gemm_padded(xp, yp, policy, interpret=interpret)
+
+
+def flash(q, k, v, *, causal: bool, scale=None,
+          bq: int = 256, bkv: int = 256,
+          interpret: Optional[bool] = None) -> jax.Array:
+    """Flash attention (pads Sq/Sk to block multiples; causal-safe)."""
+    interpret = _interpret() if interpret is None else interpret
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(bq, Sq)
+    bkv = min(bkv, Sk)
+    pq = -Sq % bq
+    pk = -Sk % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        # pad keys with a -inf-score sentinel: zero k is fine because padded
+        # q rows are dropped and padded k cols are masked by causality only
+        # when Sq == Sk; for safety we mask via an explicit large-negative
+        # bias on padded columns using value zeros (softmax weight ~ e^0) —
+        # instead simply fall back to the reference path for ragged Sk.
+        from repro.kernels.ref import ref_attention
+        return ref_attention(q[:, :Sq], k, v, causal=causal, scale=scale)
+    out = fa.flash_attention_kernel(q, k, v, causal=causal, scale=scale,
+                                    bq=bq, bkv=bkv, interpret=interpret)
+    return out[:, :Sq]
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """Full chunked SSD using the Pallas intra-chunk kernel + jnp recurrence.
+
+    Same contract as repro.models.ssm.ssd_chunked.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    Bsz, S, nh, hd = x.shape
+    g, ds = Bm.shape[2], Bm.shape[3]
+    hpg = nh // g
+    Q = min(chunk, S)
+    nc = S // Q
+    assert nc * Q == S
+    f32 = jnp.float32
+
+    dtc = dt.reshape(Bsz, nc, Q, nh).astype(f32)
+    dA = dtc * A
+    dacs = jnp.cumsum(dA, axis=2)
+
+    # broadcast B/C groups to heads for the kernel's per-head layout
+    def to_heads(t):
+        t = t.reshape(Bsz, nc, Q, g, 1, ds)
+        t = jnp.broadcast_to(t, (Bsz, nc, Q, g, hpg, ds))
+        return t.reshape(Bsz * nc, Q, nh, ds)
+
+    xk = x.reshape(Bsz * nc, Q, nh, hd)
+    y_intra = ssd_scan.ssd_intra_kernel(
+        xk, dtc.reshape(Bsz * nc, Q, nh), dacs.reshape(Bsz * nc, Q, nh),
+        to_heads(Bm), to_heads(Cm), interpret=interpret)
+    y_intra = y_intra.reshape(Bsz, nc, Q, nh, hd).astype(f32)
+
+    # ---- inter-chunk recurrence + contribution (jnp; see models.ssm) ----
+    Bc = Bm.reshape(Bsz, nc, Q, g, ds)
+    Cc = Cm.reshape(Bsz, nc, Q, g, ds)
+    xc = x.reshape(Bsz, nc, Q, g, hpg, hd)
+    decay_to_end = jnp.exp(dacs[:, :, -1:, :] - dacs)
+    w = (dtc * decay_to_end).reshape(Bsz, nc, Q, g, hpg)
+    states = jnp.einsum("bcqgd,bcqgh,bcqghp->bcghpd",
+                        Bc.astype(f32), w, xc.astype(f32))
+    chunk_decay = jnp.exp(dacs[:, :, -1, :])
+
+    def step(h, inp):
+        st, dec = inp
+        h_in = h
+        h = h * dec[:, :, None, None] + st.reshape(Bsz, nh, hd, ds)
+        return h, h_in
+
+    h0 = jnp.zeros((Bsz, nh, hd, ds), f32)
+    _, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0),
+                   jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)
+    y_inter = jnp.einsum(
+        "bcqgd,bcqgh,bcghpd->bcqghp",
+        Cc.astype(f32), jnp.exp(dacs).reshape(Bsz, nc, Q, g, hpg),
+        h_prevs.reshape(Bsz, nc, g, hpg, hd, ds))
+    y = y_intra + y_inter.reshape(Bsz, nc, Q, nh, hd)
+    return y.reshape(Bsz, S, nh, hd).astype(x.dtype)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or (jnp.int32 if x.dtype == jnp.int8 else x.dtype)
+    acc = jnp.int32 if x.dtype == jnp.int8 else jnp.float32
+    return jnp.dot(x, y, preferred_element_type=acc).astype(out_dtype)
+
+
+def ref_attention(q, k, v, *, causal: bool, scale=None) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def ref_ssd_intra(x, dt, dacs, b, c) -> jax.Array:
+    """Direct quadratic intra-chunk SSD (per-head B/C layout).
+
+    x: (BC, Q, nh, hd); dt/dacs: (BC, Q, nh); b/c: (BC, Q, nh, ds).
+    """
+    f32 = jnp.float32
+    Q = x.shape[1]
+    cb = jnp.einsum("zqhd,zkhd->zhqk", c.astype(f32), b.astype(f32))
+    seg = (dacs.astype(f32).transpose(0, 2, 1)[:, :, :, None]
+           - dacs.astype(f32).transpose(0, 2, 1)[:, :, None, :])
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None], jnp.exp(seg), 0.0)
+    m = cb * L * dt.astype(f32).transpose(0, 2, 1)[:, :, None, :]
+    y = jnp.einsum("zhqk,zkhd->zqhd", m, x.astype(f32))
+    return y.astype(x.dtype)

@@ -1,0 +1,75 @@
+"""Pallas kernel for the Mamba2 SSD intra-chunk block (the MXU hot spot).
+
+Per (batch·chunk, head-block) grid cell it computes the quadratic
+within-chunk term:  Y = ((C·Bᵀ) ∘ L(dA) ∘ dt) @ X
+where L is the causal decay matrix from the within-chunk cumsum of dA.
+The linear inter-chunk recurrence stays in jnp (repro.models.ssm) — it is
+bandwidth-trivial and latency-bound, not MXU work.
+
+B/C are pre-broadcast to per-head layout by ops.ssd_intra.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, dacs_ref, b_ref, c_ref, o_ref, *, Q: int):
+    # blocks: x (1, Q, HB, hd) dt/dacs (1, Q, HB) b/c (1, Q, HB, ds)
+    x = x_ref[0]
+    dt = dt_ref[0].astype(jnp.float32)
+    dacs = dacs_ref[0].astype(jnp.float32)       # within-chunk cumsum of dA
+    bmat = b_ref[0]
+    cmat = c_ref[0]
+
+    # CB[h, i, j] = <C_i, B_j> per head
+    cb = jax.lax.dot_general(
+        cmat.transpose(1, 0, 2), bmat.transpose(1, 0, 2),
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)       # (HB, Q, Q)
+
+    # decay L[h, i, j] = exp(dacs_i - dacs_j) for i >= j else 0
+    seg = dacs.T[:, :, None] - dacs.T[:, None, :]  # (HB, Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    jj = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 2)
+    L = jnp.exp(jnp.where(ii >= jj, seg, NEG_INF))
+
+    m = cb * L * dt.T[:, None, :]                 # (HB, Q, Q)
+    y = jax.lax.dot_general(
+        m.astype(x.dtype), x.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)       # (HB, Q, hd)
+    o_ref[0] = y.transpose(1, 0, 2).astype(o_ref.dtype)
+
+
+def ssd_intra_kernel(x, dt, dacs, b, c, *, head_block: int = 8,
+                     interpret: bool = False):
+    """x: (BC, Q, nh, hd); dt/dacs: (BC, Q, nh); b/c: (BC, Q, nh, ds).
+
+    BC = batch·chunks.  Returns the intra-chunk output (BC, Q, nh, hd).
+    """
+    BC, Q, nh, hd = x.shape
+    ds = b.shape[-1]
+    hb = min(head_block, nh)
+    assert nh % hb == 0
+    grid = (BC, nh // hb)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, hb, hd), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, Q, hb), lambda i, h: (i, 0, h)),
+            pl.BlockSpec((1, Q, hb), lambda i, h: (i, 0, h)),
+            pl.BlockSpec((1, Q, hb, ds), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, Q, hb, ds), lambda i, h: (i, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, hb, hd), lambda i, h: (i, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((BC, Q, nh, hd), x.dtype),
+        interpret=interpret,
+    )(x, dt, dacs, b, c)

@@ -1,0 +1,272 @@
+"""Trip-count-aware analysis of optimized HLO text.
+
+XLA's built-in cost_analysis() counts every `while` body exactly ONCE —
+a 40-layer scanned transformer reports ~1/40th of its real FLOPs (verified
+empirically; see EXPERIMENTS.md §Dry-run notes).  This module re-derives
+trip-aware totals directly from `compiled.as_text()`:
+
+  * segments the module into computations,
+  * extracts while trip counts from loop-condition constants,
+  * propagates call multiplicities (while/fusion/call/cond/reduce),
+  * counts dot FLOPs (result numel × contracting dims), conv FLOPs,
+  * estimates HBM traffic (materializing-op result bytes × rw factor),
+  * sums collective wire bytes by kind with ring-cost factors.
+
+Everything is per-device (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "s4": 1,
+                "u4": 1, "c64": 8, "token": 0, "opaque": 0}
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|to)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.*)$")
+
+
+def _shape_bytes(dt: str, dims: str) -> float:
+    if dt not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _result_info(rhs: str):
+    """(kind, result_bytes, result_numel) from the text after '='."""
+    # result type is everything before the op name; handle tuples
+    m = re.match(r"\s*(\([^)]*\)|[\w\[\],\{\}:\s]*?)\s*([a-z][\w\-]*)\(", rhs)
+    if not m:
+        return None, 0.0, 0
+    type_str, op = m.group(1), m.group(2)
+    total_b = 0.0
+    numel = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = _shape_bytes(dt, dims)
+        total_b += b
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        if b:
+            numel = max(numel, n)
+    return op, total_b, numel
+
+
+@dataclass
+class Module:
+    computations: dict           # name -> [lines]
+    entry: str
+    shapes: dict                 # value name -> (dtype, [dims])
+
+
+def parse_module(hlo: str) -> Module:
+    comps: dict = {}
+    shapes: dict = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        comps[cur].append(line)
+        # symbol table: %name = type op(...)
+        mm = re.match(r"\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*", line)
+        if mm:
+            rhs = line.split("=", 1)[1]
+            sm = _SHAPE_RE.search(rhs.split("(", 1)[0])
+            if sm:
+                dims = [int(d) for d in sm.group(2).split(",")] \
+                    if sm.group(2) else []
+                shapes[mm.group(1)] = (sm.group(1), dims)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return Module(comps, entry, shapes)
+
+
+def _trip_count(mod: Module, cond: str) -> int:
+    """Largest integer constant in the loop condition = iteration bound."""
+    best = 1
+    for line in mod.computations.get(cond, ()):
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def multiplicities(mod: Module) -> dict:
+    """Execution count per computation (entry = 1, while bodies × trip)."""
+    mult = {name: 0.0 for name in mod.computations}
+    mult[mod.entry] = 1.0
+    order = [mod.entry]
+    seen = {mod.entry}
+    # BFS over call edges, accumulating multiplicity (DAG-ish; HLO has no
+    # recursion, but shared computations accumulate from multiple callers)
+    idx = 0
+    while idx < len(order):
+        name = order[idx]
+        idx += 1
+        m = mult[name]
+        for line in mod.computations.get(name, ()):
+            wm = _WHILE_RE.search(line)
+            if wm and "while(" in line:
+                cond, body = wm.group(1), wm.group(2)
+                t = _trip_count(mod, cond)
+                for tgt, k in ((body, m * t), (cond, m * (t + 1))):
+                    if tgt in mult:
+                        mult[tgt] += k
+                        if tgt not in seen:
+                            seen.add(tgt)
+                            order.append(tgt)
+                continue
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for tgt in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                    if tgt in mult:
+                        mult[tgt] += m
+                        if tgt not in seen:
+                            seen.add(tgt)
+                            order.append(tgt)
+                continue
+            cm = _CALLS_RE.search(line)
+            if cm and cm.group(1) in mult:
+                tgt = cm.group(1)
+                mult[tgt] += m
+                if tgt not in seen:
+                    seen.add(tgt)
+                    order.append(tgt)
+    return mult
+
+
+# ---------------------------------------------------------------------------
+# FLOPs
+# ---------------------------------------------------------------------------
+def _dot_flops(mod: Module, line: str, numel: int) -> float:
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    ops = re.search(r"\bdot\(\s*%?([\w\.\-]+)", line)
+    k = 1
+    if cdims and ops and ops.group(1) in mod.shapes:
+        _, lshape = mod.shapes[ops.group(1)]
+        for d in (cdims.group(1).split(",") if cdims.group(1) else []):
+            di = int(d)
+            if di < len(lshape):
+                k *= lshape[di]
+    return 2.0 * numel * k
+
+
+def _conv_flops(mod: Module, line: str, numel: int) -> float:
+    m = re.search(r"convolution\(\s*%?([\w\.\-]+)\s*,\s*%?([\w\.\-]+)", line)
+    if m and m.group(2) in mod.shapes:
+        _, kshape = mod.shapes[m.group(2)]
+        kn = 1
+        for d in kshape:
+            kn *= d
+        out_ch = kshape[-1] if kshape else 1
+        # per output element: kernel_numel / out_channels MACs
+        return 2.0 * numel * kn / max(out_ch, 1)
+    return 2.0 * numel
+
+
+# ops whose results are materialized buffers (HBM traffic estimate)
+_TRAFFIC_OPS = {"fusion", "dot", "convolution", "copy", "all-gather",
+                "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "dynamic-slice", "dynamic-update-slice",
+                "gather", "scatter", "reduce", "transpose", "broadcast",
+                "concatenate", "slice", "pad", "select-and-scatter", "sort",
+                "all-gather-start", "all-reduce-start", "iota",
+                "collective-permute-start", "reduce-scatter-start"}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _fusion_bodies(mod: Module) -> set:
+    """Computations called as fusion kernels (and reduce/scatter appliers):
+    their internal ops never touch HBM — only the fusion op's operands and
+    result do, and those are counted at the call site."""
+    out = set()
+    for lines in mod.computations.values():
+        for line in lines:
+            if re.search(r"\bfusion\(", line) or "to_apply=" in line:
+                m = _CALLS_RE.search(line)
+                if m:
+                    out.add(m.group(1))
+    return out
+
+
+def analyze(hlo: str, n_devices: int) -> HloStats:
+    mod = parse_module(hlo)
+    mult = multiplicities(mod)
+    fusion_bodies = _fusion_bodies(mod)
+    st = HloStats(collective_bytes=dict.fromkeys(_COLL_KINDS, 0.0),
+                  collective_counts=dict.fromkeys(_COLL_KINDS, 0.0))
+    for name, lines in mod.computations.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = name in fusion_bodies
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            op, rbytes, numel = _result_info(om.group(1))
+            if op is None:
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if op == "dot":
+                st.flops += m * _dot_flops(mod, line, numel)
+            elif op == "convolution":
+                st.flops += m * _conv_flops(mod, line, numel)
+            if op in _TRAFFIC_OPS and not in_fusion:
+                # result write + (approx) operand read of equal size
+                st.traffic_bytes += m * rbytes * 2.0
+            if base in _COLL_KINDS:
+                g = _group_size(line, n_devices)
+                frac = (g - 1) / g if g > 1 else 0.0
+                wire = rbytes * (2 * frac if base == "all-reduce" else
+                                 (1.0 if base == "collective-permute"
+                                  else frac))
+                st.collective_bytes[base] += m * wire
+                st.collective_counts[base] += m
+    return st

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod : (data=16, model=16)            = 256 chips (v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.common import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def axes_of(mesh) -> tuple[tuple[str, ...], str]:
+    """(dp_axes, tp_axis) for a production mesh."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data"), "model"
+    return ("data",), "model"
+
+
+def make_ctx(mesh) -> ShardCtx:
+    dp, tp = axes_of(mesh)
+    return ShardCtx(mesh=mesh, dp=dp, tp=tp)
+
+
+def make_smoke_mesh(n: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    devs = jax.devices()[:n]
+    return jax.sharding.Mesh(
+        __import__("numpy").array(devs).reshape(1, len(devs)),
+        ("data", "model"))

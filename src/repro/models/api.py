@@ -1,0 +1,45 @@
+"""Unified model API: init / forward / decode_step dispatched by family."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, ssm_models, transformer
+from repro.models.common import ShardCtx
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "mla_moe", "vlm"):
+        return transformer
+    if cfg.family in ("ssm", "hybrid"):
+        return ssm_models
+    if cfg.family == "encdec":
+        return encdec
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ModelConfig, key, dtype=None):
+    return _mod(cfg).init_params(cfg, key, dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """Param ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.key(0))
+
+
+def forward(cfg: ModelConfig, params, batch,
+            ctx: Optional[ShardCtx] = None, **kw):
+    return _mod(cfg).forward(cfg, params, batch, ctx, **kw)
+
+
+def decode_step(cfg: ModelConfig, params, batch,
+                ctx: Optional[ShardCtx] = None):
+    return _mod(cfg).decode_step(cfg, params, batch, ctx)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

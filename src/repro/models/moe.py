@@ -1,0 +1,149 @@
+"""MLP layers: dense (gated / plain) and mixture-of-experts.
+
+MoE uses the GShard-style dense one-hot dispatch, formulated so that under
+pjit the dispatch/combine tensors shard over the expert axis (= "model" mesh
+axis).  Experts are expert-parallel; the combine einsum contracts the sharded
+expert axis and lowers to one all-reduce — no ragged all-to-all required for
+the dry-run (a ragged path is the deploy-target fast path, see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (ShardCtx, activation_fn, constrain,
+                                 dense_init, gated)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d, ff), dtype),
+         "wo": dense_init(ks[1], (ff, d), dtype)}
+    if gated(cfg.activation):
+        p["wg"] = dense_init(ks[2], (d, ff), dtype)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p, x, ctx: Optional[ShardCtx]):
+    act = activation_fn(cfg.activation)
+    h = x @ p["wi"]
+    h = constrain(h, ctx, "dp", None, "tp")
+    if "wg" in p:
+        h = act(x @ p["wg"]) * h
+    else:
+        h = act(h)
+    out = h @ p["wo"]
+    return constrain(out, ctx, "dp", "tp", None)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def moe_init(key, cfg: ModelConfig, dtype):
+    d, E, ffe = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 6)
+
+    def one_expert(k):
+        kk = jax.random.split(k, 3)
+        p = {"wi": dense_init(kk[0], (d, ffe), dtype),
+             "wo": dense_init(kk[1], (ffe, d), dtype)}
+        if gated(cfg.activation):
+            p["wg"] = dense_init(kk[2], (d, ffe), dtype)
+        return p
+
+    p = {"router": dense_init(ks[0], (d, E), jnp.float32),
+         "experts": jax.vmap(one_expert)(jax.random.split(ks[1], E))}
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[2], cfg, dtype,
+                               d_ff=cfg.d_ff_expert * cfg.num_shared_experts)
+    return p
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k / cfg.num_experts
+            * cfg.capacity_factor)
+    # round to an MXU-friendly multiple where it matters, keep >= top_k
+    c = max(c, cfg.top_k)
+    return -(-c // 8) * 8
+
+
+def moe_apply(cfg: ModelConfig, p, x, ctx: Optional[ShardCtx],
+              router_stats: bool = False):
+    """x: (B, S, d).  Routing groups = batch rows (GShard grouping)."""
+    B, S, d = x.shape
+    if S == 1 and B > 1:
+        # decode: route the whole batch as ONE group — per-row groups pad
+        # every expert's capacity to top_k PER TOKEN (measured ~250x slot
+        # waste on deepseek-v3 decode_32k; §Perf cell B iteration 2)
+        y = moe_apply(cfg, p, x.reshape(1, B, d), ctx, router_stats)
+        if router_stats:
+            return y[0].reshape(B, S, d), y[1]
+        return y.reshape(B, S, d)
+    E, K = cfg.num_experts, cfg.top_k
+    C = capacity(cfg, S)
+    act = activation_fn(cfg.activation)
+    # batch sharding of routing tensors: drop when EP spans the data axes
+    bsp = None if (ctx is not None and ctx.ep_covers_dp) else "dp"
+
+    logits = x.astype(jnp.float32) @ p["router"]          # (B, S, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) assignment within its expert's capacity
+    khot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)    # (B, S, K, E)
+    flat = khot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # (B, S*K, E)
+    pos = pos.reshape(B, S, K, E)
+    in_cap = (pos < C) & (khot > 0)
+
+    # dispatch: (B, S, E, C) one-hot over capacity slots, sharded on E
+    pos_in_e = (pos * khot).sum(-1)                        # (B, S, K)
+    slot_hot = jax.nn.one_hot(pos_in_e, C, dtype=x.dtype)  # (B, S, K, C)
+    keep = in_cap.any(-1).astype(x.dtype)                  # (B, S, K)
+
+    def accum(carry, k):
+        disp, comb = carry
+        ek = jax.nn.one_hot(gate_idx[:, :, k], E, dtype=x.dtype)
+        contrib = (ek[..., None] * slot_hot[:, :, k, None, :]
+                   * keep[:, :, k, None, None])            # (B, S, E, C)
+        return (disp + contrib,
+                comb + contrib * gate_vals[:, :, k, None, None].astype(x.dtype)), None
+
+    z = jnp.zeros((B, S, E, C), x.dtype)
+    z = constrain(z, ctx, bsp, None, "ep", None)
+    (dispatch, combine), _ = jax.lax.scan(accum, (z, z), jnp.arange(K))
+    dispatch = constrain(dispatch, ctx, bsp, None, "ep", None)
+    combine = constrain(combine, ctx, bsp, None, "ep", None)
+
+    xe = jnp.einsum("bsd,bsec->becd", x, dispatch)         # (B, E, C, d)
+    xe = constrain(xe, ctx, bsp, "ep", None, None)
+    h = jnp.einsum("becd,edf->becf", xe, p["experts"]["wi"])
+    if "wg" in p["experts"]:
+        h = act(jnp.einsum("becd,edf->becf", xe, p["experts"]["wg"])) * h
+    else:
+        h = act(h)
+    ye = jnp.einsum("becf,efd->becd", h, p["experts"]["wo"])
+    ye = constrain(ye, ctx, bsp, "ep", None, None)
+    y = jnp.einsum("becd,bsec->bsd", ye, combine)          # all-reduce over E
+    y = constrain(y, ctx, bsp, "tp" if bsp else None, None)
+
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(cfg, p["shared"], x, ctx)
+
+    if router_stats:
+        # load-balance aux loss (Switch-style)
+        frac_tokens = jnp.mean(
+            jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), (0, 1))
+        frac_probs = jnp.mean(probs, (0, 1))
+        aux = E * jnp.sum(frac_tokens * frac_probs)
+        return y, aux
+    return y

@@ -1,0 +1,263 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (quadratic intra-chunk,
+linear inter-chunk recurrence); decode is the O(1)-state recurrent step.
+The Pallas kernel in repro.kernels.ssd_scan accelerates the intra-chunk
+matmuls on TPU; this module is the reference/dry-run path and shares its
+math with repro.kernels.ref.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ShardCtx, constrain, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def mamba_init(key, cfg: ModelConfig, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    g, ds, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * g * ds
+    ks = jax.random.split(key, 8)
+    in_dim = 2 * di + 2 * g * ds + nh  # [z, x, B, C, dt]
+    return {
+        "in_proj": dense_init(ks[0], (d, in_dim), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_dim), dtype, 0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], (di, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+def causal_conv(x, w, b):
+    """Depthwise causal conv as W shifted multiplies.  x: (B, S, C); w: (W, C).
+
+    Written as elementwise ops (not conv_general_dilated with
+    feature_group_count) because XLA SPMD cannot channel-partition grouped
+    convs — it replicates the operand, blowing up per-device memory on
+    wide SSM blocks.  W is tiny (4), so W shifted fmas are also faster.
+    """
+    W = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = b
+    for i in range(W):
+        out = out + xp[:, i:i + S] * w[i]
+    return out
+
+
+def conv_step(x_new, conv_state, w, b):
+    """x_new: (B, C); conv_state: (B, W-1, C) rolling buffer."""
+    full = jnp.concatenate([conv_state, x_new[:, None]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, w) + b
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked)
+# ---------------------------------------------------------------------------
+def segsum(dA):
+    """dA: (..., Q) -> (..., Q, Q) lower-triangular segment sums
+    T[i, j] = sum_{k=j+1..i} dA[k] for i >= j, -inf above diagonal."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, -1)
+    T = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, T, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state=None, return_final=False,
+                ctx: Optional[ShardCtx] = None):
+    """Chunked SSD scan.
+
+    x : (B, S, nh, hd)     dt: (B, S, nh)      A: (nh,) (negative)
+    Bm, Cm: (B, S, g, ds)  heads are grouped nh = g * hpg.
+    Returns y: (B, S, nh, hd) [, final_state (B, nh, hd, ds)].
+    """
+    Bsz, S, nh, hd = x.shape
+    g, ds = Bm.shape[2], Bm.shape[3]
+    hpg = nh // g
+    Q = min(chunk, S)
+    nc = S // Q
+    assert nc * Q == S, f"seq {S} not divisible by chunk {Q}"
+
+    f32 = jnp.float32
+
+    # head-major layout throughout: the head dim (nh = g·hpg) is the only
+    # dim that divides the model axis, so B/C are broadcast to per-head form
+    # and every large intermediate is pinned head-sharded.  Without the pins
+    # XLA leaves the (B,nc,nh,Q,Q) decay/score tensors replicated (~160 GiB
+    # on zamba2 train_4k).
+    def pin_h(t, h_axis):
+        if ctx is None or ctx.tp is None \
+                or nh % ctx.mesh.shape[ctx.tp] != 0:
+            return t
+        spec = ["dp"] + [None] * (t.ndim - 1)
+        spec[h_axis] = "tp"
+        return constrain(t, ctx, *spec)
+
+    xc = pin_h(x.reshape(Bsz, nc, Q, nh, hd), 3)
+    dtc = dt.reshape(Bsz, nc, Q, nh).astype(f32)
+    Bh = jnp.broadcast_to(
+        Bm.reshape(Bsz, S, g, 1, ds),
+        (Bsz, S, g, hpg, ds)).reshape(Bsz, nc, Q, nh, ds)
+    Ch = jnp.broadcast_to(
+        Cm.reshape(Bsz, S, g, 1, ds),
+        (Bsz, S, g, hpg, ds)).reshape(Bsz, nc, Q, nh, ds)
+    Bh, Ch = pin_h(Bh, 3), pin_h(Ch, 3)
+
+    dA = dtc * A  # (B, nc, Q, nh)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    L = pin_h(jnp.exp(segsum(jnp.moveaxis(dA, 3, 2))), 2)  # (B,nc,nh,Q,Q)
+    CB = pin_h(jnp.einsum("bcqhd,bckhd->bchqk", Ch, Bh,
+                          preferred_element_type=f32), 2)  # (B,nc,nh,Q,Q)
+    M = CB * L * jnp.moveaxis(dtc, 2, 3)[..., None, :]     # × dt_j
+    y_intra = pin_h(jnp.einsum("bchqk,bckhp->bcqhp",
+                               M, xc.astype(f32)), 3)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (B, nc, Q, nh)
+    w = dtc * decay_to_end
+    states = pin_h(jnp.einsum("bcqhd,bcqh,bcqhp->bchpd",
+                              Bh.astype(f32), w, xc.astype(f32)), 2)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # (B, nc, nh)
+    h0 = (jnp.zeros((Bsz, nh, hd, ds), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(h, inp):
+        st, dec = inp  # st: (B, nh, hd, ds), dec: (B, nh)
+        h_in = h
+        h = h * dec[..., None, None] + st
+        return h, h_in
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0),
+                   jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = pin_h(jnp.moveaxis(h_prevs, 0, 1), 2)        # (B,nc,nh,hd,ds)
+
+    # ---- inter-chunk contribution ----
+    decay_in = jnp.exp(dA_cs)                              # (B, nc, Q, nh)
+    y_inter = jnp.einsum("bcqhd,bcqh,bchpd->bcqhp",
+                         Ch.astype(f32), decay_in, h_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, nh, hd).astype(x.dtype)
+    if return_final:
+        return y, h_final
+    return y
+
+
+def ssd_step(x, dt, A, Bm, Cm, h):
+    """Single-token SSD recurrence.
+
+    x: (B, nh, hd); dt: (B, nh); Bm/Cm: (B, g, ds); h: (B, nh, hd, ds).
+    """
+    Bsz, nh, hd = x.shape
+    g, ds = Bm.shape[1], Bm.shape[2]
+    hpg = nh // g
+    f32 = jnp.float32
+    dt = dt.astype(f32)
+    dA = jnp.exp(dt * A)                                  # (B, nh)
+    Bx = jnp.einsum("bgd,bghp->bghpd", Bm.astype(f32),
+                    (dt.reshape(Bsz, g, hpg)[..., None]
+                     * x.reshape(Bsz, g, hpg, hd).astype(f32)))
+    h = h * dA[..., None, None] + Bx.reshape(Bsz, nh, hd, ds)
+    y = jnp.einsum("bghpd,bgd->bghp", h.reshape(Bsz, g, hpg, hd, ds),
+                   Cm.astype(f32))
+    return y.reshape(Bsz, nh, hd).astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+def _split_in_proj(cfg: ModelConfig, proj):
+    di, g, ds, nh = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                     cfg.ssm_nheads)
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * g * ds]
+    dt = proj[..., di + di + 2 * g * ds:]
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ModelConfig, xBC):
+    di, g, ds = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    x = xBC[..., :di]
+    Bm = xBC[..., di:di + g * ds]
+    Cm = xBC[..., di + g * ds:]
+    return x, Bm, Cm
+
+
+def mamba_apply(cfg: ModelConfig, p, u, ctx: Optional[ShardCtx],
+                use_kernel: bool = False):
+    """Full-sequence Mamba2 mixer.  u: (B, S, d) (already normed)."""
+    B, S, _ = u.shape
+    nh, hd, g, ds = (cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_ngroups,
+                     cfg.ssm_state)
+    proj = u @ p["in_proj"]
+    proj = constrain(proj, ctx, "dp", None, "tp")
+    z, xBC, dt_raw = _split_in_proj(cfg, proj)
+    xBC = causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    x, Bm, Cm = _split_xbc(cfg, xBC)
+    x = x.reshape(B, S, nh, hd)
+    Bm = Bm.reshape(B, S, g, ds)
+    Cm = Cm.reshape(B, S, g, ds)
+    # softplus at the proj boundary stays in compute dtype: an f32 cast here
+    # promotes the cotangent of the FULL (B,S,in_dim) projection to f32
+    # (pad of the dt slice), doubling backward activation bytes; dt is
+    # upcast to f32 immediately downstream inside the SSD math.
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"].astype(dt_raw.dtype))
+    A = -jnp.exp(p["A_log"])
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y = kops.ssd(x, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y = ssd_chunked(x, dt, A, Bm, Cm, cfg.ssm_chunk, ctx=ctx)
+    y = y + (p["D"].astype(y.dtype)[:, None] * x)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = constrain(y, ctx, "dp", None, "tp")
+    # gate in compute dtype: fp32 casts here replicate (B,S,2d) activations
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return constrain(out, ctx, "dp", "tp", None)
+
+
+def mamba_decode(cfg: ModelConfig, p, u, ssm_state, conv_state):
+    """Single-token step.  u: (B, 1, d); returns (out, ssm_state, conv_state)."""
+    B = u.shape[0]
+    nh, hd, g, ds = (cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_ngroups,
+                     cfg.ssm_state)
+    proj = (u[:, 0] @ p["in_proj"])
+    z, xBC, dt_raw = _split_in_proj(cfg, proj)
+    xBC, conv_state = conv_step(xBC, conv_state, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    x, Bm, Cm = _split_xbc(cfg, xBC)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_step(x.reshape(B, nh, hd), dt, A,
+                            Bm.reshape(B, g, ds), Cm.reshape(B, g, ds),
+                            ssm_state)
+    y = y + (p["D"][:, None] * x.reshape(B, nh, hd).astype(jnp.float32)
+             ).astype(y.dtype)
+    y = y.reshape(B, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["out_norm"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], ssm_state, conv_state

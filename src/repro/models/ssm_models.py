@@ -1,0 +1,154 @@
+"""Full models for the ssm (mamba2-780m) and hybrid (zamba2-7b) families.
+
+zamba2 structure: a Mamba2 backbone with ONE shared attention+MLP block
+(weights shared) applied before every `attn_every`-th layer.  Layers are
+processed in groups: [shared-attn] -> scan(mamba x attn_every), which keeps
+scan bodies homogeneous and lets decode index attention caches statically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.common import ShardCtx, constrain, dense_init, rms_norm
+from repro.models.transformer import _remat, _sp, lm_logits
+
+
+def _mamba_block_init(key, cfg: ModelConfig, dtype):
+    return {"norm": jnp.ones((cfg.d_model,), dtype),
+            "mixer": ssm.mamba_init(key, cfg, dtype)}
+
+
+def init_params(cfg: ModelConfig, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    params = {
+        "embed": (jax.random.normal(ks[0], (V, d), jnp.float32) * 0.02
+                  ).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+        "layers": jax.vmap(lambda k: _mamba_block_init(k, cfg, dtype))(
+            jax.random.split(ks[1], L)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], (d, V), dtype)
+    if cfg.family == "hybrid":
+        kk = jax.random.split(ks[3], 3)
+        params["shared_attn"] = {
+            "attn": attn.gqa_init(kk[0], cfg, dtype),
+            "mlp": moe_mod.mlp_init(kk[1], cfg, dtype),
+            "norm1": jnp.ones((d,), dtype),
+            "norm2": jnp.ones((d,), dtype),
+        }
+    return params
+
+
+def _mamba_stack(cfg, stacked, x, ctx):
+    def body(carry, p_layer):
+        # pin the norm output back to SP so the full-sequence gather the
+        # mixer needs happens on the bf16 tensor, not the hoisted f32
+        # upcast inside rms_norm (§Perf cell C: halves gather bytes)
+        h = _sp(rms_norm(carry, p_layer["norm"], cfg.norm_eps), ctx)
+        return _sp(carry + ssm.mamba_apply(cfg, p_layer["mixer"], h, ctx),
+                   ctx), None
+
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def _shared_attn_apply(cfg, p, x, positions, ctx):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    a = attn.gqa_apply(cfg, p["attn"], h, positions=positions, causal=True,
+                       ctx=ctx)
+    x = _sp(x + a, ctx)
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    return _sp(x + moe_mod.mlp_apply(cfg, p["mlp"], h, ctx), ctx)
+
+
+def _groups(cfg: ModelConfig):
+    """[(start, end), ...] mamba-layer groups, one shared-attn before each."""
+    k = cfg.attn_every
+    return [(s, min(s + k, cfg.num_layers)) for s in range(0, cfg.num_layers, k)]
+
+
+def forward(cfg: ModelConfig, params, batch, ctx: Optional[ShardCtx] = None):
+    x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+    x = _sp(x, ctx)
+    S = x.shape[1]
+    if cfg.family == "ssm":
+        x = _mamba_stack(cfg, params["layers"], x, ctx)
+    else:
+        positions = jnp.arange(S)
+        # shared-attn applications are OUTSIDE the layer scans, so they must
+        # carry their own remat: without it the flash online-softmax scan
+        # saves every kv-block iteration for backward (~30 GiB/device on
+        # zamba2 train_4k).
+        shared = _remat(
+            lambda xx, p: (_shared_attn_apply(cfg, p, xx, positions, ctx),
+                           None), cfg)
+        for (s, e) in _groups(cfg):
+            x, _ = shared(x, params["shared_attn"])
+            sub = jax.tree.map(lambda a: a[s:e], params["layers"])
+            x = _mamba_stack(cfg, sub, x, ctx)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(cfg, params, h, ctx)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def _mamba_stack_decode(cfg, stacked, x, ssm_states, conv_states):
+    def body(carry, layer):
+        h = rms_norm(carry, layer["p"]["norm"], cfg.norm_eps)
+        out, s_new, c_new = ssm.mamba_decode(cfg, layer["p"]["mixer"], h,
+                                             layer["s"], layer["c"])
+        return carry + out, (s_new, c_new)
+
+    x, (s_new, c_new) = jax.lax.scan(
+        body, x, {"p": stacked, "s": ssm_states, "c": conv_states})
+    return x, s_new, c_new
+
+
+def decode_step(cfg: ModelConfig, params, batch,
+                ctx: Optional[ShardCtx] = None):
+    idx = batch["cache_index"]
+    x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ctx, "dp", None, None)
+    new_caches = {}
+
+    if cfg.family == "ssm":
+        x, s_new, c_new = _mamba_stack_decode(
+            cfg, params["layers"], x, batch["ssm_state"], batch["conv_state"])
+        new_caches["ssm_state"], new_caches["conv_state"] = s_new, c_new
+    else:
+        kc, vc = batch["k_cache"], batch["v_cache"]
+        s_parts, c_parts, k_parts, v_parts = [], [], [], []
+        for j, (s, e) in enumerate(_groups(cfg)):
+            h = rms_norm(x, params["shared_attn"]["norm1"], cfg.norm_eps)
+            a, nk, nv = attn.gqa_decode(cfg, params["shared_attn"]["attn"], h,
+                                        kc[j], vc[j], idx, ctx=ctx)
+            x = x + a
+            h = rms_norm(x, params["shared_attn"]["norm2"], cfg.norm_eps)
+            x = x + moe_mod.mlp_apply(cfg, params["shared_attn"]["mlp"], h,
+                                      ctx)
+            k_parts.append(nk[None])
+            v_parts.append(nv[None])
+            sub = jax.tree.map(lambda a: a[s:e], params["layers"])
+            x, s_new, c_new = _mamba_stack_decode(
+                cfg, sub, x, batch["ssm_state"][s:e], batch["conv_state"][s:e])
+            s_parts.append(s_new)
+            c_parts.append(c_new)
+        new_caches["k_cache"] = jnp.concatenate(k_parts, 0)
+        new_caches["v_cache"] = jnp.concatenate(v_parts, 0)
+        new_caches["ssm_state"] = jnp.concatenate(s_parts, 0)
+        new_caches["conv_state"] = jnp.concatenate(c_parts, 0)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(cfg, params, h, ctx), new_caches

@@ -1,0 +1,1 @@
+from repro.optim.adamw import OptConfig, global_norm, init, lr_at, update  # noqa: F401

@@ -1,0 +1,54 @@
+"""Power/thermal clock-frequency process (paper §IV-C).
+
+The SM/TensorCore clock under power management is a mean-reverting noisy
+process: during a sustained 16384³ BF16 GEMM the paper measures the H100
+clock fluctuating 1,201–1,558 MHz (mean 1,352, σ 32) at 1 kHz.  We model it
+as an Ornstein–Uhlenbeck process whose mean depends on load (duty cycle):
+heavier sustained matrix work pulls the clock down from boost.  The OFU
+pipeline only ever sees *point samples* of this process — reproducing the
+instantaneous-sample-vs-hardware-average asymmetry that drives Table I.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.peaks import DEFAULT_CHIP, ChipSpec
+
+
+@dataclass
+class ClockModel:
+    """OU process: df = θ(μ(load) − f)dt + σ dW, clipped to [f_min, f_max]."""
+
+    chip: ChipSpec = DEFAULT_CHIP
+    theta: float = 2.0           # mean reversion rate (1/s)
+    sigma_mhz: float = 32.0      # matches the paper's observed σ
+    throttle_frac: float = 0.115  # full-load mean = (1-θf)·f_max
+    f_min_frac: float = 0.60
+
+    def mean_clock(self, duty: float) -> float:
+        return self.chip.f_max_mhz * (1.0 - self.throttle_frac * duty)
+
+    def simulate(self, duty: np.ndarray, dt_s: float,
+                 seed: int = 0) -> np.ndarray:
+        """Per-interval clock trajectory given a duty-cycle trajectory.
+
+        duty: (T,) MXU duty cycle in [0,1] per dt_s interval.
+        Returns (T,) instantaneous clock samples (MHz) at interval ends.
+        """
+        rng = np.random.default_rng(seed)
+        T = len(duty)
+        f = np.empty(T)
+        cur = self.mean_clock(float(duty[0]))
+        a = np.exp(-self.theta * dt_s)
+        # exact OU discretization
+        sd = self.sigma_mhz * np.sqrt(max(1e-12, 1 - a * a))
+        noise = rng.standard_normal(T)
+        f_min = self.chip.f_max_mhz * self.f_min_frac
+        for t in range(T):
+            mu = self.mean_clock(float(duty[t]))
+            cur = mu + (cur - mu) * a + sd * noise[t]
+            cur = min(max(cur, f_min), self.chip.f_max_mhz)
+            f[t] = cur
+        return f

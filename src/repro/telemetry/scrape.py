@@ -1,0 +1,42 @@
+"""Prometheus-style scraper over counter backends (paper §V-B telemetry).
+
+Enforces the §IV-C rule: scrape interval must be ≤ the hardware averaging
+window (30 s), otherwise readings become averages-of-averages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.telemetry.counters import MAX_HW_AVG_WINDOW_S, CounterBackend
+
+
+@dataclass
+class ScrapeSeries:
+    """Aligned counter series for one device."""
+
+    interval_s: float
+    tpa: np.ndarray
+    clock_mhz: np.ndarray
+
+    def subsample(self, factor: int) -> "ScrapeSeries":
+        """Coarser scrape (Table I methodology): keep every factor-th point."""
+        return ScrapeSeries(self.interval_s * factor,
+                            self.tpa[factor - 1::factor],
+                            self.clock_mhz[factor - 1::factor])
+
+
+def scrape(backend: CounterBackend, duration_s: float, interval_s: float,
+           *, strict: bool = True) -> ScrapeSeries:
+    """Collect (TPA, clock) at a fixed interval for duration_s."""
+    if strict and interval_s > MAX_HW_AVG_WINDOW_S:
+        raise ValueError(
+            f"scrape interval {interval_s}s exceeds the {MAX_HW_AVG_WINDOW_S}s "
+            "hardware averaging window (average-of-averages, paper §IV-C)")
+    n = int(duration_s / interval_s)
+    tpa = np.empty(n)
+    clk = np.empty(n)
+    for i in range(n):
+        tpa[i], clk[i] = backend.poll(interval_s)
+    return ScrapeSeries(interval_s, tpa, clk)

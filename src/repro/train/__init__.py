@@ -1,0 +1,6 @@
+from repro.train import checkpoint  # noqa: F401
+from repro.train.steps import (  # noqa: F401
+    cross_entropy, loss_fn, make_prefill_step, make_serve_step,
+    make_train_step,
+)
+from repro.train.trainer import TrainConfig, Trainer  # noqa: F401

@@ -1,0 +1,95 @@
+"""Atomic numpy-based sharded checkpointing (fault-tolerance substrate).
+
+Layout:  <dir>/step_<n>/ { manifest.json, 0000.npy, 0001.npy, ... }
+Writes go to a temp dir + atomic rename, so a crash mid-save never corrupts
+the restore point.  `keep` bounds disk usage; `latest_step` drives restart.
+On a multi-host deployment each host writes its local shards (addressable
+devices) — here single-process, whole arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+# numpy's npy format has no bf16/fp8 descriptor: store as a same-width
+# integer view and restore the logical dtype from the manifest.
+_WIDE_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+              "float8_e5m2": np.uint8}
+
+
+def _paths(tree) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(k) for k, _ in flat]
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        manifest = {"step": step, "leaves": []}
+        for i, (key, val) in enumerate(flat):
+            arr = np.asarray(val)
+            fn = f"{i:04d}.npy"
+            logical = str(arr.dtype)
+            if logical in _WIDE_VIEW:  # np.save can't represent bf16/fp8
+                arr = arr.view(_WIDE_VIEW[logical])
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"].append(
+                {"path": jax.tree_util.keystr(key), "file": fn,
+                 "dtype": logical, "shape": list(arr.shape)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")
+             and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of `like` (validates paths + shapes)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {m["path"]: m for m in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for key, ref in flat:
+        ks = jax.tree_util.keystr(key)
+        m = by_path[ks]
+        arr = np.load(os.path.join(d, m["file"]))
+        if m["dtype"] in _WIDE_VIEW:
+            import ml_dtypes
+            arr = arr.view(getattr(ml_dtypes, m["dtype"]))
+        assert list(arr.shape) == list(np.shape(ref)), (ks, arr.shape)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,103 @@
+"""FLOPs accounting: published param counts, buggy-variant signatures,
+remat multiplier, and cross-validation against compiled HLO."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, make_inputs
+from repro.configs.base import ShapeSpec
+from repro.flops import (decode_step_flops, forward_flops, model_flops_6nd,
+                         param_count_analytic, step_flops, train_step_flops)
+
+PUBLISHED = {  # total params, tolerance
+    "deepseek-moe-16b": (16.4e9, 0.05),
+    "deepseek-v3-671b": (671e9, 0.01),
+    "qwen3-4b": (4.0e9, 0.05),
+    "nemotron-4-340b": (340e9, 0.03),
+    "granite-3-2b": (2.5e9, 0.05),
+    "llama3.2-3b": (3.2e9, 0.05),
+    "mamba2-780m": (0.78e9, 0.05),
+}
+
+
+@pytest.mark.parametrize("arch,expect", list(PUBLISHED.items()))
+def test_param_counts_match_published(arch, expect):
+    total, tol = expect
+    pc = param_count_analytic(get_config(arch))
+    assert pc == pytest.approx(total, rel=tol)
+
+
+def test_active_params_moe():
+    cfg = get_config("deepseek-v3-671b")
+    active = param_count_analytic(cfg, active_only=True)
+    assert active == pytest.approx(37e9, rel=0.05)  # published 37B active
+
+
+def test_train_is_3f_and_remat_is_4f():
+    cfg = get_config("granite-3-2b")
+    shape = SHAPES["train_4k"]
+    fwd = forward_flops(cfg, shape).total_mxu
+    assert train_step_flops(cfg, shape, executed=False).total_mxu \
+        == pytest.approx(3 * fwd)
+    assert train_step_flops(cfg, shape, executed=True,
+                            remat=True).total_mxu \
+        == pytest.approx(4 * forward_flops(cfg, shape,
+                                           executed=True).total_mxu)
+
+
+def test_naive_moe_variant_inflates_3x():
+    cfg = get_config("deepseek-v3-671b")
+    shape = SHAPES["train_4k"]
+    exact = step_flops(cfg, shape).total_mxu
+    naive = step_flops(cfg, shape, variant="naive_moe").total_mxu
+    assert 2.5 < naive / exact < 4.5  # paper: ~3x
+
+
+def test_naive_hybrid_variant_inflates():
+    cfg = get_config("zamba2-7b")
+    shape = SHAPES["train_4k"]
+    exact = step_flops(cfg, shape).total_mxu
+    naive = step_flops(cfg, shape, variant="naive_hybrid").total_mxu
+    assert 1.3 < naive / exact < 2.5  # paper: 24.51/15.56 = 1.57x
+
+
+def test_ssm_vpu_fraction_material():
+    """DESIGN.md §2: non-MXU undercounting is material for SSM archs."""
+    bd_ssm = forward_flops(get_config("mamba2-780m"), SHAPES["train_4k"])
+    bd_dense = forward_flops(get_config("granite-3-2b"), SHAPES["train_4k"])
+    frac_ssm = bd_ssm.total_vpu / bd_ssm.total
+    frac_dense = bd_dense.total_vpu / bd_dense.total
+    assert frac_ssm > 3 * frac_dense
+
+
+def test_decode_flops_scale_with_context():
+    cfg = get_config("qwen3-4b")
+    a = decode_step_flops(cfg, ShapeSpec("d", 8192, 128, "decode")).total_mxu
+    b = decode_step_flops(cfg, ShapeSpec("d", 32768, 128, "decode")).total_mxu
+    assert b > a  # KV reads grow with context
+    assert b < 4 * a  # ...but weights dominate at these sizes
+
+
+def test_6nd_convention():
+    cfg = get_config("llama3.2-3b")
+    shape = SHAPES["train_4k"]
+    got = model_flops_6nd(cfg, shape)
+    assert got == pytest.approx(
+        6 * param_count_analytic(cfg) * shape.global_batch * shape.seq_len)
+
+
+def test_analytic_close_to_compiled_hlo():
+    """Cross-validate the analytic counter against XLA cost analysis on a
+    smoke config (single layer, unscanned ops dominate)."""
+    cfg = get_config("granite-3-2b").smoke()
+    shape = ShapeSpec("t", 64, 2, "train")
+    batch = make_inputs(cfg, shape)
+    from repro.models import forward, init_params
+    params = init_params(cfg, jax.random.key(0))
+    comp = jax.jit(lambda p, b: forward(cfg, p, b)).lower(params,
+                                                          batch).compile()
+    hlo_flops = comp.cost_analysis().get("flops", 0.0)
+    # scan bodies are counted once by XLA; smoke cfg has 2 layers -> correct
+    # by adding one extra body worth. We only check the right order.
+    analytic = forward_flops(cfg, shape).total_mxu
+    assert 0.2 < hlo_flops / analytic < 5.0

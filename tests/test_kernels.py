@@ -1,0 +1,120 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.tile_quant import TilePolicy
+from repro.kernels import ops
+from repro.kernels.ref import ref_attention, ref_matmul, ref_ssd_intra
+from repro.models.ssm import ssd_chunked
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# GEMM: shape x dtype sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,N,K", [
+    (128, 128, 128),      # exact single tile
+    (256, 512, 384),      # multi-tile aligned
+    (300, 150, 200),      # ragged (tile quantization engaged)
+    (1, 128, 128),        # degenerate M
+    (129, 257, 513),      # off-by-one everywhere
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_matches_ref(M, N, K, dtype):
+    x = _arr((M, K), dtype)
+    y = _arr((K, N), dtype)
+    out, prof = ops.matmul(x, y, policy=TilePolicy(128, 128, 128))
+    ref = ref_matmul(x, y)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol * 10, atol=tol)
+    assert out.shape == (M, N)
+    assert prof.profiled_flops >= prof.theoretical_flops
+
+
+def test_gemm_int8():
+    x = jnp.asarray(RNG.integers(-100, 100, (200, 300)), jnp.int8)
+    y = jnp.asarray(RNG.integers(-100, 100, (300, 100)), jnp.int8)
+    out, _ = ops.matmul(x, y, policy=TilePolicy(128, 128, 128))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_matmul(x, y)))
+
+
+def test_gemm_profile_is_exact_tile_count():
+    pol = TilePolicy(128, 128, 128)
+    _, prof = ops.matmul(_arr((300, 200)), _arr((200, 150)), policy=pol)
+    assert prof.profiled_flops == 2 * 384 * 256 * 256
+    assert prof.overhead == pytest.approx(
+        (2 * 384 * 256 * 256 - 2 * 300 * 150 * 200) / (2 * 300 * 150 * 200))
+
+
+# ---------------------------------------------------------------------------
+# flash attention: shape sweep incl. GQA + causal
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,hd,causal", [
+    (2, 128, 128, 8, 8, 32, True),     # MHA causal
+    (2, 128, 128, 8, 2, 32, True),     # GQA causal
+    (1, 64, 128, 4, 4, 16, False),     # cross-shaped, full
+    (2, 256, 256, 4, 1, 64, True),     # MQA
+])
+def test_flash_matches_ref(B, Sq, Sk, H, KV, hd, causal):
+    q = _arr((B, Sq, H, hd))
+    k = _arr((B, Sk, KV, hd))
+    v = _arr((B, Sk, KV, hd))
+    out = ops.flash(q, k, v, causal=causal, bq=64, bkv=64)
+    ref = ref_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_bf16():
+    q = _arr((2, 128, 4, 32), jnp.bfloat16)
+    k = _arr((2, 128, 4, 32), jnp.bfloat16)
+    v = _arr((2, 128, 4, 32), jnp.bfloat16)
+    out = ops.flash(q, k, v, causal=True, bq=64, bkv=64)
+    ref = ref_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk kernel + full kernel path vs model path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("BC,Q,nh,hd,ds,hb", [
+    (4, 16, 4, 16, 8, 2),
+    (2, 32, 8, 8, 16, 4),
+    (1, 64, 2, 32, 4, 2),
+])
+def test_ssd_intra_matches_ref(BC, Q, nh, hd, ds, hb):
+    from repro.kernels.ssd_scan import ssd_intra_kernel
+    x = _arr((BC, Q, nh, hd), scale=0.5)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (BC, Q, nh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (nh,)), jnp.float32)
+    dA = dt * A
+    dacs = jnp.cumsum(dA, axis=1)
+    b = _arr((BC, Q, nh, ds), scale=0.3)
+    c = _arr((BC, Q, nh, ds), scale=0.3)
+    out = ssd_intra_kernel(x, dt, dacs, b, c, head_block=hb, interpret=True)
+    ref = ref_ssd_intra(x, dt, dacs, b, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_full_kernel_path_matches_model_path():
+    B, S, nh, hd, g, ds, Q = 2, 64, 4, 16, 2, 8, 16
+    x = _arr((B, S, nh, hd), scale=0.5)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, S, nh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (nh,)), jnp.float32)
+    Bm = _arr((B, S, g, ds), scale=0.3)
+    Cm = _arr((B, S, g, ds), scale=0.3)
+    yk = ops.ssd(x, dt, A, Bm, Cm, chunk=Q)
+    yj = ssd_chunked(x, dt, A, Bm, Cm, Q)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yj),
+                               rtol=1e-3, atol=1e-3)

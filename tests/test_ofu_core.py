@@ -1,0 +1,68 @@
+"""Unit tests for the OFU metric core (paper Eq. 1, 5, 8, 9, 12)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (TPU_V5E, AccuracyReport, adjusted_ofu, effective_peak,
+                        mae, mfu_from_throughput, ofu_mean, ofu_point,
+                        pct_within, pearson_r)
+
+
+def test_peak_derivation_matches_published():
+    # Eq. 5 audit: 4 MXUs x 128x128 x 2 x 1500 MHz = 196.6 TF/s (~197 pub.)
+    assert TPU_V5E.peak_tflops("bf16") == pytest.approx(196.608)
+    assert TPU_V5E.peak_tflops("int8") == pytest.approx(393.216)
+    assert TPU_V5E.peak_tflops("fp32") == pytest.approx(196.608 / 4)
+
+
+def test_ofu_point_eq1():
+    # full duty at full clock = 1.0; clock throttle scales linearly
+    assert ofu_point(1.0, TPU_V5E.f_max_mhz) == pytest.approx(1.0)
+    assert ofu_point(0.5, TPU_V5E.f_max_mhz * 0.9) == pytest.approx(0.45)
+
+
+@given(st.floats(0, 1), st.floats(0.5, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_ofu_bounded(tpa, clock_frac):
+    v = ofu_point(tpa, TPU_V5E.f_max_mhz * clock_frac)
+    assert 0.0 <= v <= 1.0 + 1e-9
+
+
+def test_adjusted_ofu_eq8():
+    # hardware executed 10% extra FLOPs -> OFU_adj shrinks by that factor
+    assert adjusted_ofu(0.55, 100.0, 110.0) == pytest.approx(0.5)
+    assert adjusted_ofu(0.55, 100.0, 0.0) == 0.55  # degenerate guard
+
+
+def test_effective_peak_harmonic_mean_eq12():
+    # all bf16 -> bf16 peak; all int8 -> int8 peak
+    assert effective_peak({"bf16": 1e12}) == pytest.approx(196.608)
+    assert effective_peak({"int8": 1e12}) == pytest.approx(393.216)
+    # 50/50 FLOPs split -> harmonic mean
+    p = effective_peak({"bf16": 1.0, "int8": 1.0})
+    expect = 2 / (1 / 196.608 + 1 / 393.216)
+    assert p == pytest.approx(expect)
+    # mixed peak sits strictly between the two
+    assert 196.608 < p < 393.216
+
+
+def test_effective_peak_bf16_only_raises_mfu():
+    """Paper §VI-B: constant throughput, BF16-only -> lower peak -> higher
+    MFU.  The effective-peak denominator must reproduce that."""
+    tflops_per_chip = 80.0
+    p_mixed = effective_peak({"bf16": 0.4, "fp8": 0.6})
+    p_bf16 = effective_peak({"bf16": 1.0})
+    assert mfu_from_throughput(tflops_per_chip, p_bf16) > \
+        mfu_from_throughput(tflops_per_chip, p_mixed)
+
+
+def test_accuracy_stats():
+    est = [10.0, 12.0, 20.0]
+    tru = [11.0, 12.0, 15.0]
+    assert mae(est, tru) == pytest.approx(2.0)
+    assert pct_within(est, tru, 2.0) == pytest.approx(2 / 3)
+    r = pearson_r([1, 2, 3, 4], [2, 4, 6, 8])
+    assert r == pytest.approx(1.0)
+    rep = AccuracyReport.build("ofu", est, tru)
+    assert rep.within_5pp == 1.0

@@ -1,0 +1,78 @@
+"""Telemetry substrate: clock process, hardware averaging, scrape rules,
+event injection (the §VI-A regression mechanics)."""
+import numpy as np
+import pytest
+
+from repro.telemetry import (MAX_HW_AVG_WINDOW_S, ClockModel, Event,
+                             ScrapeSeries, SimulatedDeviceBackend,
+                             StepProfile, scrape)
+
+
+def _profile(duty=0.4, step_s=2.0):
+    return StepProfile(mxu_time_s=duty * step_s, step_time_s=step_s)
+
+
+def test_clock_process_statistics():
+    cm = ClockModel()
+    duty = np.full(3000, 1.0)
+    f = cm.simulate(duty, dt_s=1.0, seed=0)
+    # paper §IV-C: sustained load -> throttled mean, σ ~ 32 MHz
+    assert abs(f.mean() - cm.mean_clock(1.0)) < 20
+    assert 15 < f.std() < 60
+    assert f.max() <= cm.chip.f_max_mhz + 1e-6
+
+
+def test_tpa_is_hardware_averaged():
+    be = SimulatedDeviceBackend(_profile(0.4), seed=1)
+    tpa, clk = be.poll(30.0)
+    assert tpa == pytest.approx(0.4, abs=0.02)
+    assert clk <= be.chip.f_max_mhz
+
+
+def test_scrape_interval_rule():
+    be = SimulatedDeviceBackend(_profile(), seed=0)
+    with pytest.raises(ValueError):
+        scrape(be, 120.0, 60.0)          # > 30 s window -> avg-of-avgs
+    s = scrape(be, 120.0, 30.0)
+    assert len(s.tpa) == 4
+
+
+def test_event_injection_reproduces_regression_factor():
+    """A 2.5x host-sync slowdown must show as exactly ~2.5x lower TPA
+    (the Gloo debug-flag case, Fig. 6)."""
+    ev = Event(start_s=300, end_s=900, slowdown=2.5)
+    be = SimulatedDeviceBackend(_profile(0.45), events=[ev], seed=2)
+    s = scrape(be, 900.0, 30.0)
+    before = s.tpa[:10].mean()
+    during = s.tpa[10:].mean()
+    assert before / during == pytest.approx(2.5, rel=0.05)
+
+
+def test_straggler_scales_step_time():
+    a = SimulatedDeviceBackend(_profile(0.4), seed=0).poll(30)[0]
+    b = SimulatedDeviceBackend(_profile(0.4), straggler_factor=2.0,
+                               seed=0).poll(30)[0]
+    assert b == pytest.approx(a / 2, rel=0.05)
+
+
+def test_subsample_matches_table1_semantics():
+    s = ScrapeSeries(1.0, np.arange(60, dtype=float), np.arange(60.0))
+    s30 = s.subsample(30)
+    assert s30.interval_s == 30.0
+    assert len(s30.tpa) == 2
+    assert s30.tpa[0] == 29  # last point of each window (point sample)
+
+
+def test_clock_sampling_noise_shrinks_with_interval():
+    """Table I: coarser intervals -> larger deviation from the 1 s baseline,
+    but 95% CI stays small (sub-pp) for steady workloads."""
+    be = SimulatedDeviceBackend(_profile(0.55, 1.0), seed=3)
+    base = scrape(be, 1500.0, 1.0)
+    ofu_base = (base.tpa * base.clock_mhz).mean() / be.chip.f_max_mhz
+    errs = {}
+    for k in (5, 30):
+        sub = base.subsample(k)
+        errs[k] = abs((sub.tpa * sub.clock_mhz).mean()
+                      / be.chip.f_max_mhz - ofu_base)
+    assert errs[5] <= errs[30] + 0.004
+    assert errs[30] < 0.01  # well under 1pp

@@ -1,0 +1,75 @@
+"""Tile quantization: closed form (Eq. 3/4) must equal the kernel grid
+EXACTLY (0-FLOP error — tighter than the paper's <1000-FLOP nvJet match)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tile_quant import (TilePolicy, correction_factor,
+                                   effective_dims, overhead, pick_policy,
+                                   profiled_flops, scale_factor_overhead,
+                                   theoretical_flops)
+from repro.kernels.gemm import grid_flops
+
+dims = st.integers(min_value=1, max_value=5000)
+tiles = st.sampled_from([128, 256, 512])
+clusters = st.sampled_from([1, 2, 4])
+
+
+@given(dims, dims, dims, tiles, tiles, tiles, clusters, clusters)
+@settings(max_examples=200, deadline=None)
+def test_closed_form_equals_kernel_grid(M, N, K, tm, tn, tk, cm, cn):
+    pol = TilePolicy(tm, tn, tk, cm, cn)
+    assert profiled_flops(M, N, K, pol) == grid_flops(M, N, K, pol)
+
+
+@given(dims, dims, dims)
+@settings(max_examples=100, deadline=None)
+def test_overhead_nonnegative_and_bounded(M, N, K):
+    pol = pick_policy(M, N, K)
+    oh = overhead(M, N, K, pol)
+    assert oh >= 0.0
+    # worst case: every dim rounds nearly a full tile*cluster up
+    me, ne, ke = effective_dims(M, N, K, pol)
+    assert me >= M and ne >= N and ke >= K
+    assert me < M + pol.tm * pol.cm
+    assert ne < N + pol.tn * pol.cn
+    assert ke < K + pol.tk
+
+
+def test_paper_patterns():
+    """Fig. 1 qualitative patterns: overhead decreases with size; aligned
+    sizes at N>=4096 stay under ~9-12%; tiny sizes can exceed 50%."""
+    pol = lambda n: pick_policy(n, n, n)
+    big_aligned = [overhead(n, n, n, pol(n)) for n in range(4096, 16385, 128)]
+    assert max(big_aligned) <= 0.12
+    small = overhead(200, 200, 200, pol(200))
+    assert small > 0.5
+    # monotone-ish decrease in the mean across UNALIGNED size bands
+    lo = np.mean([overhead(n, n, n, pol(n)) for n in range(515, 1024, 97)])
+    hi = np.mean([overhead(n, n, n, pol(n)) for n in range(8195, 9216, 97)])
+    assert hi < lo
+
+
+def test_two_level_ceiling_eq4():
+    """A matrix fitting exactly into tiles can still pad at cluster level."""
+    pol = TilePolicy(512, 512, 512, cm=2, cn=1)
+    # M = 3 tiles -> cluster rounds to 4 tiles
+    me, _, _ = effective_dims(3 * 512, 512, 512, pol)
+    assert me == 4 * 512
+
+
+def test_correction_factor_inverts_overhead():
+    pol = pick_policy(1000, 1000, 1000)
+    cf = correction_factor(1000, 1000, 1000, pol)
+    assert cf == pytest.approx(
+        theoretical_flops(1000, 1000, 1000)
+        / profiled_flops(1000, 1000, 1000, pol))
+    assert cf <= 1.0
+
+
+def test_scale_factor_overhead_shrinks_with_k():
+    a = scale_factor_overhead(4096, 4096, 512, "int8")
+    b = scale_factor_overhead(4096, 4096, 8192, "int8")
+    assert a > b > 0
+    assert scale_factor_overhead(4096, 4096, 512, "bf16") == 0.0
