@@ -1,0 +1,88 @@
+"""Fleet-engine throughput: vectorized vs per-device scalar simulation.
+
+Metric is simulated device-seconds per wall-second — how much fleet
+telemetry one CPU core can synthesize in real time.  The scalar reference
+is timed on a small slice (it is the thing being replaced); the vectorized
+engine is then timed head-to-head on the same slice AND at the paper's
+operating point (1,000 devices x 1 hour at 30 s scrapes).  Emits a BENCH
+json line with the headline numbers for the driver.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.fleet.engine import simulate_devices
+from repro.fleet.jobs import JobSpec, simulate_fleet
+from repro.fleet.streaming import StreamingRollup
+from repro.telemetry.counters import (Event, SimulatedDeviceBackend,
+                                      StepProfile)
+from repro.telemetry.scrape import scrape
+
+PROFILE = StepProfile(mxu_time_s=0.84, step_time_s=2.0)
+EVENTS = [Event(start_s=600, end_s=1200, slowdown=2.5)]
+INTERVAL_S = 30.0
+
+
+def _scalar(n_dev: int, duration_s: float) -> None:
+    rng = np.random.default_rng(0)
+    for _ in range(n_dev):
+        be = SimulatedDeviceBackend(PROFILE, events=EVENTS,
+                                    seed=int(rng.integers(0, 2 ** 31)))
+        scrape(be, duration_s, INTERVAL_S)
+
+
+def _vector(n_dev: int, duration_s: float) -> None:
+    simulate_devices(PROFILE, duration_s=duration_s, interval_s=INTERVAL_S,
+                     events=EVENTS, n_devices=n_dev, seed=0)
+
+
+def run() -> list[Row]:
+    rows = []
+    # -- head-to-head on the same slice (16 devices x 30 min) -------------
+    n_dev, dur = 16, 1800.0
+    devsec = n_dev * dur
+    _, us_scalar = timed(_scalar, n_dev, dur, repeat=2)
+    _, us_vector = timed(_vector, n_dev, dur, repeat=3)
+    thr_scalar = devsec / (us_scalar / 1e6)
+    thr_vector = devsec / (us_vector / 1e6)
+    speedup = us_scalar / us_vector
+    rows.append(Row("fleet_engine.scalar_16dev_30min", us_scalar,
+                    f"device_seconds_per_wall_s={thr_scalar:.0f}"))
+    rows.append(Row("fleet_engine.vector_16dev_30min", us_vector,
+                    f"device_seconds_per_wall_s={thr_vector:.0f} "
+                    f"speedup={speedup:.1f}x"))
+
+    # -- the acceptance operating point: 1000 devices x 1 hour ------------
+    spec = JobSpec("bench-fleet", "granite-3-2b", chips=1000,
+                   true_duty=0.35, duration_s=3600.0,
+                   scrape_interval_s=INTERVAL_S, seed=0)
+    t0 = time.perf_counter()
+    (tel,) = simulate_fleet([spec], max_devices=1000)
+    roll = StreamingRollup(bucket_s=300)
+    roll.add_job(tel)
+    wall_s = time.perf_counter() - t0
+    devsec_full = 1000 * 3600.0
+    thr_full = devsec_full / wall_s
+    rows.append(Row("fleet_engine.vector_1000dev_1h_rollup", wall_s * 1e6,
+                    f"device_seconds_per_wall_s={thr_full:.0f} "
+                    f"wall_s={wall_s:.2f} ofu={tel.ofu * 100:.1f}% "
+                    f"buckets={roll.n_buckets}"))
+
+    print("BENCH " + json.dumps({
+        "name": "fleet_engine",
+        "scalar_devsec_per_s": round(thr_scalar),
+        "vector_devsec_per_s": round(thr_vector),
+        "speedup_x": round(speedup, 1),
+        "fleet_1000dev_1h_wall_s": round(wall_s, 3),
+        "fleet_devsec_per_s": round(thr_full),
+    }))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

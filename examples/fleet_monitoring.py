@@ -18,9 +18,10 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core.ofu import ofu_series
-from repro.fleet import (JobSpec, RecoveryService, StragglerMonitor, analyze,
-                         rollup, simulate_job)
+from repro.fleet import (JobSpec, RecoveryService, StragglerMonitor,
+                         StreamingRollup, analyze, rollup, simulate_fleet)
 from repro.fleet.divergence import JobPoint
+from repro.fleet.regression import detect_regressions
 from repro.telemetry import Event
 
 
@@ -53,7 +54,9 @@ def main():
     ]
 
     print("== scraping fleet (30 s interval, hardware counters only) ==")
-    tels = {s.job_id: simulate_job(s, max_devices=4) for s in specs}
+    # vectorized engine: every sampled device of every job in one pass
+    tels = {t.spec.job_id: t
+            for t in simulate_fleet(specs, max_devices=32)}
     points = [JobPoint(t.spec.job_id, t.spec.arch, t.spec.chips,
                        t.app_mfu, t.ofu, t.spec.flops_variant)
               for t in tels.values()]
@@ -88,6 +91,23 @@ def main():
     flagged = StragglerMonitor().flag(per_dev)
     print(f"  device duty cycles: {np.round(per_dev, 3)} -> "
           f"flag devices {flagged}")
+
+    print("\n== streaming rollup (per-job / per-precision / fleet) ==")
+    roll = StreamingRollup(bucket_s=300)
+    for t in tels.values():
+        roll.add_job(t)
+    print(" ", roll.summary())
+    f = roll.fleet_stats()
+    for b in range(roll.n_buckets):
+        print(f"  t={f.centers_s[b]:6.0f}s p10={f.percentiles[10][b] * 100:5.1f}% "
+              f"p50={f.percentiles[50][b] * 100:5.1f}% "
+              f"p90={f.percentiles[90][b] * 100:5.1f}%")
+    # the bucketed per-job series feeds the same regression detector
+    regs = detect_regressions(roll.job_ofu("embodied-agent"),
+                              window=2, min_duration=1)
+    detail = f"factor {regs[0].factor:.2f}x" if regs else "none found"
+    print(f"  bucketed detector on embodied-agent: "
+          f"{len(regs)} regression(s), {detail}")
 
     print("\n== goodput rollup (§II) ==")
     print(" ", rollup(list(tels.values())).summary())

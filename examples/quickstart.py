@@ -6,6 +6,27 @@ atomic checkpointing, and crash recovery — the full §VI loop on CPU.
 The default runs the reduced same-family config of the chosen architecture.
 On a real v5e pod, drop --smoke-scale and point --arch at any of the ten
 assigned architectures (see src/repro/configs/).
+
+Fleet engine quickstart (vectorized telemetry, repro.fleet.engine):
+simulate thousands of devices x hours of 30 s scrapes in well under a
+second, then roll them up into streaming per-job/per-precision/fleet
+OFU percentiles:
+
+    from repro.fleet import JobSpec, StreamingRollup, simulate_fleet
+
+    specs = [JobSpec(f"job{i}", "granite-3-2b", chips=1000,
+                     true_duty=0.35, duration_s=3600) for i in range(4)]
+    roll = StreamingRollup(bucket_s=300)
+    for tel in simulate_fleet(specs, max_devices=1000):
+        roll.add_job(tel)
+    print(roll.summary())                    # fleet-wide weighted OFU
+    series = roll.job_ofu("job0")            # feed to detect_regressions
+    p50 = roll.fleet_stats().percentiles[50]  # bucketed fleet median
+
+`simulate_fleet(..., engine="scalar")` selects the per-device reference
+backend instead; `benchmarks/fleet_engine.py` measures the gap (~45x on
+a laptop core, ~15M simulated device-seconds per wall-second).  See
+examples/fleet_monitoring.py for the full §V/§VI monitoring loop.
 """
 import argparse
 import json

@@ -1,8 +1,9 @@
 """OFU — the paper's primary contribution: a hardware-counter-derived,
 precision-agnostic FLOP-utilization metric with characterized error terms."""
 from repro.core.ofu import (  # noqa: F401
-    AccuracyReport, adjusted_ofu, effective_peak, mae, mfu_from_throughput,
-    ofu_mean, ofu_point, ofu_series, pct_within, pearson_r,
+    AccuracyReport, adjusted_ofu, effective_peak, hist_percentile, mae,
+    mfu_from_throughput, ofu_mean, ofu_point, ofu_series, pct_within,
+    pearson_r,
 )
 from repro.core.peaks import CHIPS, DEFAULT_CHIP, TPU_V5E, ChipSpec  # noqa: F401
 from repro.core.tile_quant import (  # noqa: F401

@@ -79,6 +79,30 @@ def pct_within(estimates: Sequence[float], truth: Sequence[float],
     return float(np.mean(np.abs(e - t) <= bound_pp))
 
 
+def hist_percentile(edges: np.ndarray, counts: np.ndarray,
+                    q: float) -> float:
+    """Percentile q (0–100) from a weighted histogram, by linear
+    interpolation within the containing bin.
+
+    This is the streaming-rollup primitive: fleet-scale OFU percentiles are
+    maintained as fixed-size per-bucket histograms (O(1) memory per time
+    bucket regardless of device count), and read out through this function.
+    Returns NaN for an empty histogram.
+    """
+    counts = np.asarray(counts, float)
+    edges = np.asarray(edges, float)
+    total = counts.sum()
+    if total <= 0:
+        return float("nan")
+    cum = np.cumsum(counts)
+    target = total * min(max(q, 0.0), 100.0) / 100.0
+    i = int(np.searchsorted(cum, target))
+    i = min(i, len(counts) - 1)
+    prev = cum[i - 1] if i > 0 else 0.0
+    frac = (target - prev) / counts[i] if counts[i] > 0 else 0.0
+    return float(edges[i] + frac * (edges[i + 1] - edges[i]))
+
+
 def pearson_r(a: Sequence[float], b: Sequence[float]) -> float:
     a, b = np.asarray(a, float), np.asarray(b, float)
     a = a - a.mean()

@@ -1,7 +1,13 @@
 from repro.fleet.divergence import DivergenceReport, JobPoint, analyze  # noqa: F401
+from repro.fleet.engine import (  # noqa: F401
+    DeviceGrid, EngineParams, simulate_devices,
+)
 from repro.fleet.goodput import FleetRollup, rollup  # noqa: F401
 from repro.fleet.jobs import (  # noqa: F401
-    JobSpec, JobTelemetry, build_profile, simulate_job,
+    JobSpec, JobTelemetry, build_profile, simulate_fleet, simulate_job,
+)
+from repro.fleet.streaming import (  # noqa: F401
+    BucketStats, StreamingRollup, precision_label,
 )
 from repro.fleet.recovery import (  # noqa: F401
     RecoveryAction, RecoveryService, StragglerMonitor,

@@ -1,0 +1,182 @@
+"""Streaming OFU rollups: per-job / per-precision / fleet-wide percentiles
+over time buckets (the paper's §II efficiency-review dashboards at §V-B
+fleet scale).
+
+State per (scope, time-bucket) is a fixed-size weighted histogram, so
+memory is O(buckets × scopes), independent of device count or scrape rate
+— a 5,888-GPU job streams through the same few kilobytes a 8-GPU job does.
+Readouts go through `core.ofu.hist_percentile`; per-job bucket means feed
+the existing `regression.detect_regressions` detector unchanged, and
+`to_job_points` bridges into `divergence.analyze`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.ofu import hist_percentile, ofu_series
+
+_FLEET = "__fleet__"
+
+
+def precision_label(precisions: dict) -> str:
+    """Canonical group label for a job's precision mix, e.g. 'bf16+fp8'."""
+    return "+".join(sorted(p for p, f in precisions.items() if f > 0)) \
+        or "unknown"
+
+
+@dataclass
+class BucketStats:
+    """One scope's readout: aligned per-bucket arrays."""
+
+    bucket_s: float
+    mean: np.ndarray                     # NaN where a bucket saw no samples
+    weight: np.ndarray
+    percentiles: dict = field(default_factory=dict)   # q -> (B,) array
+
+    @property
+    def centers_s(self) -> np.ndarray:
+        return (np.arange(len(self.mean)) + 0.5) * self.bucket_s
+
+
+class StreamingRollup:
+    """Incremental fleet OFU aggregator over fixed time buckets.
+
+    observe() takes raw aligned counter-derived OFU samples (any shape) and
+    folds them into per-job, per-group (precision mix by default), and
+    fleet-wide histograms; readouts are percentile/mean time series.
+    """
+
+    def __init__(self, bucket_s: float = 300.0, *, bins: int = 128,
+                 lo: float = 0.0, hi: float = 1.1):
+        self.bucket_s = float(bucket_s)
+        self.bins = int(bins)
+        self.edges = np.linspace(lo, hi, bins + 1)
+        self._hists: dict = {}      # scope -> (B, bins) weights, grown lazily
+        self._sums: dict = {}       # scope -> (B,) weighted value sums
+        self._job_meta: dict = {}   # job_id -> dict (app_mfu, chips, ...)
+        self.n_buckets = 0
+
+    # -- ingest -------------------------------------------------------------
+    def _scope_arrays(self, scope: str, b_needed: int):
+        if b_needed > self.n_buckets:
+            self.n_buckets = b_needed
+        h = self._hists.get(scope)
+        if h is None or h.shape[0] < self.n_buckets:
+            nh = np.zeros((self.n_buckets, self.bins))
+            ns = np.zeros(self.n_buckets)
+            if h is not None:
+                nh[:h.shape[0]] = h
+                ns[:h.shape[0]] = self._sums[scope]
+            self._hists[scope], self._sums[scope] = nh, ns
+        return self._hists[scope], self._sums[scope]
+
+    def observe(self, job_id: str, t_s: np.ndarray, ofu: np.ndarray, *,
+                group: str = "unknown", weight: float = 1.0) -> None:
+        """Fold OFU samples at times t_s into every scope this job hits."""
+        t_s = np.asarray(t_s, float).ravel()
+        v = np.asarray(ofu, float).ravel()
+        # right-closed buckets: a scrape at t covers (t - interval, t], so a
+        # boundary sample (t == k·bucket_s) belongs to bucket k-1, not k —
+        # otherwise every run grows a spurious one-sample trailing bucket
+        b = np.maximum(np.ceil(t_s / self.bucket_s).astype(int) - 1, 0)
+        k = np.clip(np.digitize(v, self.edges) - 1, 0, self.bins - 1)
+        b_needed = int(b.max()) + 1 if len(b) else 0
+        for scope in (("job", job_id), ("group", group), ("group", _FLEET)):
+            h, s = self._scope_arrays(scope, b_needed)
+            np.add.at(h, (b, k), weight)
+            np.add.at(s, b, v * weight)
+
+    def add_job(self, tel, *, group: str | None = None) -> None:
+        """Ingest a JobTelemetry: every sampled device's OFU series,
+        chip-weighted so each job contributes its full fleet footprint."""
+        spec = tel.spec
+        group = group or precision_label(spec.precisions)
+        n_dev = len(tel.device_series)
+        w = spec.chips / max(n_dev, 1)
+        self._job_meta[spec.job_id] = {
+            "chips": spec.chips, "app_mfu": tel.app_mfu, "arch": spec.arch,
+            "flops_variant": spec.flops_variant}
+        for s in tel.device_series:
+            t = (np.arange(len(s.tpa)) + 1.0) * s.interval_s
+            self.observe(spec.job_id, t,
+                         ofu_series(s.tpa, s.clock_mhz, spec.chip),
+                         group=group, weight=w)
+
+    # -- readout ------------------------------------------------------------
+    def _stats(self, scope, qs=(10, 50, 90)) -> BucketStats:
+        h = self._hists.get(scope)
+        if h is None:
+            empty = np.empty(0)
+            return BucketStats(self.bucket_s, empty, empty)
+        if h.shape[0] < self.n_buckets:            # pad lazily-grown scopes
+            h, s = self._scope_arrays(scope, self.n_buckets)
+        else:
+            s = self._sums[scope]
+        w = h.sum(axis=1)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            mean = np.where(w > 0, s / np.maximum(w, 1e-12), np.nan)
+        pct = {q: np.array([hist_percentile(self.edges, h[b], q)
+                            for b in range(h.shape[0])]) for q in qs}
+        return BucketStats(self.bucket_s, mean, w, pct)
+
+    def job_stats(self, job_id: str, qs=(10, 50, 90)) -> BucketStats:
+        return self._stats(("job", job_id), qs)
+
+    def group_stats(self, group: str, qs=(10, 50, 90)) -> BucketStats:
+        return self._stats(("group", group), qs)
+
+    def fleet_stats(self, qs=(10, 50, 90)) -> BucketStats:
+        return self._stats(("group", _FLEET), qs)
+
+    @property
+    def jobs(self) -> list:
+        return [k[1] for k in self._hists if k[0] == "job"]
+
+    @property
+    def groups(self) -> list:
+        return [k[1] for k in self._hists
+                if k[0] == "group" and k[1] != _FLEET]
+
+    def job_ofu(self, job_id: str, *, fill: bool = True) -> np.ndarray:
+        """Per-bucket mean OFU series — detector-ready input for
+        `regression.detect_regressions`.  fill=True forward-fills empty
+        buckets so the detector never sees NaN gaps."""
+        mean = self.job_stats(job_id, qs=()).mean.copy()
+        if fill and len(mean):
+            good = ~np.isnan(mean)
+            if good.any():
+                idx = np.maximum.accumulate(
+                    np.where(good, np.arange(len(mean)), -1))
+                first = int(np.argmax(good))
+                idx[idx < 0] = first
+                mean = mean[idx]
+        return mean
+
+    def to_job_points(self):
+        """Bridge to `divergence.analyze`: one JobPoint per ingested job
+        (requires app MFU captured via add_job)."""
+        from repro.fleet.divergence import JobPoint
+        out = []
+        for jid in self.jobs:
+            m = self._job_meta.get(jid)
+            if m is None:
+                continue
+            s = self.job_stats(jid, qs=())
+            ofu = float(np.nansum(s.mean * s.weight)
+                        / max(np.nansum(s.weight), 1e-12))
+            out.append(JobPoint(jid, m["arch"], m["chips"], m["app_mfu"],
+                                ofu, m["flops_variant"]))
+        return out
+
+    def summary(self) -> str:
+        f = self.fleet_stats()
+        w = np.nansum(f.weight)
+        mean = float(np.nansum(f.mean * f.weight) / max(w, 1e-12))
+        last = f.percentiles.get(50, np.array([np.nan]))[-1] \
+            if self.n_buckets else float("nan")
+        return (f"fleet_rollup buckets={self.n_buckets} "
+                f"jobs={len(self.jobs)} groups={len(self.groups)} "
+                f"weighted_ofu={mean * 100:.1f}% "
+                f"last_bucket_p50={last * 100:.1f}%")

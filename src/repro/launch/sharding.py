@@ -39,6 +39,8 @@ def _fit(dim: int, mesh: Mesh, axes):
     """Return axes if dim divides their product, else a divisible fallback."""
     if axes is None:
         return None
+    if not isinstance(axes, str) and len(axes) == 1:
+        axes = axes[0]   # canonical singleton: ('data',) == 'data' sharding
     if dim % _axis_size(mesh, axes) == 0:
         return axes
     if not isinstance(axes, str) and len(axes) > 1:

@@ -1,6 +1,6 @@
 from repro.telemetry.clock import ClockModel  # noqa: F401
 from repro.telemetry.counters import (  # noqa: F401
     MAX_HW_AVG_WINDOW_S, CounterBackend, Event, SimulatedDeviceBackend,
-    StepProfile, TpuProfilerBackend,
+    StepProfile, TpuProfilerBackend, duty_grid, event_factors,
 )
 from repro.telemetry.scrape import ScrapeSeries, scrape  # noqa: F401

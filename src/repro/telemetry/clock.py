@@ -27,7 +27,8 @@ class ClockModel:
     throttle_frac: float = 0.115  # full-load mean = (1-θf)·f_max
     f_min_frac: float = 0.60
 
-    def mean_clock(self, duty: float) -> float:
+    def mean_clock(self, duty):
+        """Load-dependent OU mean; accepts a scalar or an ndarray duty."""
         return self.chip.f_max_mhz * (1.0 - self.throttle_frac * duty)
 
     def simulate(self, duty: np.ndarray, dt_s: float,
@@ -51,4 +52,33 @@ class ClockModel:
             cur = mu + (cur - mu) * a + sd * noise[t]
             cur = min(max(cur, f_min), self.chip.f_max_mhz)
             f[t] = cur
+        return f
+
+    def simulate_batch(self, duty: np.ndarray, dt_s: float, seed: int = 0,
+                       f0: np.ndarray | None = None) -> np.ndarray:
+        """Batched OU trajectories: one clock process per device.
+
+        duty: (n_devices, T) MXU duty cycle in [0,1] per dt_s interval.
+        f0:   optional (n_devices,) initial clocks; defaults to the
+              load-dependent mean at t=0 (same convention as simulate()).
+        Returns (n_devices, T) instantaneous clock samples (MHz).  The
+        recurrence is over T only; all device math is vectorized, which is
+        what makes fleet-scale simulation tractable.
+        """
+        duty = np.asarray(duty, float)
+        D, T = duty.shape
+        rng = np.random.default_rng(seed)
+        a = np.exp(-self.theta * dt_s)
+        sd = self.sigma_mhz * np.sqrt(max(1e-12, 1 - a * a))
+        mu = self.mean_clock(duty)                      # (D, T)
+        noise = rng.standard_normal((D, T))
+        f_min = self.chip.f_max_mhz * self.f_min_frac
+        cur = mu[:, 0].copy() if f0 is None else \
+            np.broadcast_to(np.asarray(f0, float), (D,)).copy()
+        f = np.empty((D, T))
+        for t in range(T):
+            m = mu[:, t]
+            cur = m + (cur - m) * a + sd * noise[:, t]
+            np.clip(cur, f_min, self.chip.f_max_mhz, out=cur)
+            f[:, t] = cur
         return f

@@ -13,7 +13,6 @@ against real TPU counters (`TpuProfilerBackend`, deploy target).
 """
 from __future__ import annotations
 
-import bisect
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -52,6 +51,44 @@ class StepProfile:
     @property
     def duty(self) -> float:
         return min(1.0, self.mxu_time_s / self.step_time_s)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized counter path (the fleet-engine hot loop)
+# ---------------------------------------------------------------------------
+def event_factors(events: Sequence[Event],
+                  ts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-time (slowdown, mxu_scale) arrays for a time grid of any shape.
+
+    Vectorized replacement for the linear per-sample event scan: iterating
+    the (few) events over the (many) samples instead of the reverse.  When
+    events overlap, the FIRST event by start time wins — matching the
+    scalar backend's scan order — hence the reversed assignment loop.
+    """
+    ts = np.asarray(ts, float)
+    slow = np.ones_like(ts)
+    scale = np.ones_like(ts)
+    # reversed stable ascending sort: on equal start times the FIRST-listed
+    # event is assigned last, i.e. wins — exactly the scan's tie-break
+    for e in reversed(sorted(events, key=lambda e: e.start_s)):
+        m = (e.start_s <= ts) & (ts < e.end_s)
+        slow[m] = e.slowdown
+        scale[m] = e.mxu_scale
+    return slow, scale
+
+
+def duty_grid(profile: StepProfile, ts: np.ndarray, *,
+              straggler=1.0, events: Sequence[Event] = ()) -> np.ndarray:
+    """Deterministic duty cycle evaluated on a whole time grid at once.
+
+    ts may be any shape; `straggler` may be a scalar or an array that
+    broadcasts against ts (e.g. (n_devices, 1, 1) against (S, n_sub) for a
+    full fleet grid).  Semantics match SimulatedDeviceBackend._duty_at.
+    """
+    slow, scale = event_factors(events, ts)
+    step = profile.step_time_s * np.asarray(straggler, float) * slow
+    mxu = profile.mxu_time_s * scale
+    return np.minimum(1.0, mxu / step)
 
 
 class CounterBackend:
@@ -99,22 +136,11 @@ class SimulatedDeviceBackend(CounterBackend):
         self._seed = seed
 
     # -- internals ----------------------------------------------------------
-    def _event_at(self, t: float) -> Optional[Event]:
-        for e in self.events:
-            if e.start_s <= t < e.end_s:
-                return e
-        return None
-
     def _duty_at(self, t: float) -> float:
         """Mean duty cycle around time t (deterministic component)."""
-        p = self.profile
-        step = p.step_time_s * self.straggler
-        mxu = p.mxu_time_s
-        ev = self._event_at(t)
-        if ev is not None:
-            step = step * ev.slowdown
-            mxu = mxu * ev.mxu_scale
-        return min(1.0, mxu / step)
+        return float(duty_grid(self.profile, np.asarray([t]),
+                               straggler=self.straggler,
+                               events=self.events)[0])
 
     # -- CounterBackend -----------------------------------------------------
     def poll(self, window_s: float) -> tuple[float, float]:
@@ -131,7 +157,8 @@ class SimulatedDeviceBackend(CounterBackend):
         n = max(8, int(avg_w / max(self.profile.step_time_s / 4, 1e-3)))
         n = min(n, 4096)
         ts = np.linspace(t1 - avg_w, t1, n, endpoint=False)
-        duties = np.array([self._duty_at(t) for t in ts])
+        duties = duty_grid(self.profile, ts, straggler=self.straggler,
+                           events=self.events)
         # per-step jitter -> duty wobble (hardware-averaged, so mild)
         duties = duties * np.exp(self.rng.standard_normal(n)
                                  * self.profile.jitter / np.sqrt(n))

@@ -5,6 +5,7 @@ window (30 s), otherwise readings become averages-of-averages.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -30,10 +31,17 @@ class ScrapeSeries:
 def scrape(backend: CounterBackend, duration_s: float, interval_s: float,
            *, strict: bool = True) -> ScrapeSeries:
     """Collect (TPA, clock) at a fixed interval for duration_s."""
-    if strict and interval_s > MAX_HW_AVG_WINDOW_S:
-        raise ValueError(
-            f"scrape interval {interval_s}s exceeds the {MAX_HW_AVG_WINDOW_S}s "
-            "hardware averaging window (average-of-averages, paper §IV-C)")
+    if interval_s > MAX_HW_AVG_WINDOW_S:
+        msg = (f"scrape interval {interval_s}s exceeds the "
+               f"{MAX_HW_AVG_WINDOW_S}s hardware averaging window "
+               "(average-of-averages, paper §IV-C)")
+        if strict:
+            raise ValueError(msg)
+        # degraded mode: each reading only reflects the LAST 30 s before
+        # the poll instant; everything in between is invisible
+        warnings.warn(msg + "; readings only cover the trailing "
+                      f"{MAX_HW_AVG_WINDOW_S}s of each interval",
+                      RuntimeWarning, stacklevel=2)
     n = int(duration_s / interval_s)
     tpa = np.empty(n)
     clk = np.empty(n)

@@ -1,0 +1,154 @@
+"""Property-check shim: real `hypothesis` when installed, a minimal
+deterministic fallback otherwise.
+
+The seed image does not ship `hypothesis`, which used to crash tier-1 at
+COLLECTION time (three modules `import hypothesis` at top level).  Test
+modules now do
+
+    from _propcheck import given, settings, st
+
+and get either the real library or this fallback: a fixed-seed random
+sampler that runs each property `max_examples` times.  The fallback
+supports exactly the strategy surface the suite uses (floats, integers,
+sampled_from, lists, tuples, booleans, just) — extend it here if a test
+needs more.  Install `requirements-dev.txt` to get real shrinking/edge
+cases; CI without it still executes every property.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import assume, given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # ------------------------------------------------ shim
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 25
+
+    class _Unsatisfied(Exception):
+        """Raised by assume(False): skip this example."""
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied
+        return True
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise _Unsatisfied
+            return _Strategy(draw)
+
+    class _St:
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            lo, hi = float(min_value), float(max_value)
+
+            def draw(rng):
+                # hit the endpoints now and then — the cheap edge cases
+                r = rng.random()
+                if r < 0.05:
+                    return lo
+                if r < 0.10:
+                    return hi
+                return lo + rng.random() * (hi - lo)
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            lo, hi = int(min_value), int(max_value)
+
+            def draw(rng):
+                r = rng.random()
+                if r < 0.05:
+                    return lo
+                if r < 0.10:
+                    return hi
+                return rng.randint(lo, hi)
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    st = _St()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_):
+        """Records max_examples; works above or below @given."""
+        def deco(fn):
+            fn._pc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_pc_max_examples", None) \
+                    or getattr(fn, "_pc_max_examples", _DEFAULT_EXAMPLES)
+                # deterministic per-test seed so failures reproduce
+                rng = random.Random(
+                    zlib.crc32(fn.__qualname__.encode()))
+                ran = 0
+                for _ in range(n * 4):
+                    if ran >= n:
+                        break
+                    try:
+                        vals = [s.draw(rng) for s in strategies]
+                        kw = {k: s.draw(rng)
+                              for k, s in kw_strategies.items()}
+                    except _Unsatisfied:
+                        continue
+                    try:
+                        fn(*args, *vals, **kw, **kwargs)
+                    except _Unsatisfied:
+                        continue
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"property falsified on example "
+                            f"args={vals} kwargs={kw}: {e}") from e
+                    ran += 1
+            # strategy-fed params must not look like pytest fixtures
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco

@@ -96,7 +96,10 @@ def test_analytic_close_to_compiled_hlo():
     params = init_params(cfg, jax.random.key(0))
     comp = jax.jit(lambda p, b: forward(cfg, p, b)).lower(params,
                                                           batch).compile()
-    hlo_flops = comp.cost_analysis().get("flops", 0.0)
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):   # older jax: one dict per device
+        ca = ca[0] if ca else {}
+    hlo_flops = ca.get("flops", 0.0)
     # scan bodies are counted once by XLA; smoke cfg has 2 layers -> correct
     # by adding one extra body worth. We only check the right order.
     analytic = forward_flops(cfg, shape).total_mxu

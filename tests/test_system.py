@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings, st
 
 from repro.configs import SHAPES, get_config, input_specs
 from repro.launch.hlo_analysis import analyze, multiplicities, parse_module
@@ -15,9 +14,12 @@ from repro.launch.hlo_analysis import analyze, multiplicities, parse_module
 # ---------------------------------------------------------------------------
 try:
     AM = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
-except TypeError:  # older signature
-    AM = jax.sharding.AbstractMesh(axis_sizes=(16, 16),
-                                   axis_names=("data", "model"))
+except TypeError:
+    try:  # jax ~0.4.3x: a single tuple of (name, size) pairs
+        AM = jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
+    except TypeError:  # older keyword signature
+        AM = jax.sharding.AbstractMesh(axis_sizes=(16, 16),
+                                       axis_names=("data", "model"))
 
 
 def _spec(path, shape):

@@ -1,5 +1,7 @@
 """Telemetry substrate: clock process, hardware averaging, scrape rules,
 event injection (the §VI-A regression mechanics)."""
+import warnings
+
 import numpy as np
 import pytest
 
@@ -61,6 +63,49 @@ def test_subsample_matches_table1_semantics():
     assert s30.interval_s == 30.0
     assert len(s30.tpa) == 2
     assert s30.tpa[0] == 29  # last point of each window (point sample)
+
+
+def test_nonstrict_scrape_warns_and_degrades():
+    """§IV-C average-of-averages hazard: polling slower than the 30 s
+    hardware window is allowed with strict=False but (a) warns, and (b)
+    each reading reflects ONLY the trailing 30 s — activity in the blind
+    leading part of the interval is invisible."""
+    # duty collapses in [0, 30) only: a 60 s poll's blind zone
+    ev = Event(start_s=0.0, end_s=30.0, slowdown=10.0)
+    be = SimulatedDeviceBackend(_profile(0.4), events=[ev], seed=4)
+    with pytest.warns(RuntimeWarning, match="average-of-averages"):
+        s = scrape(be, 60.0, 60.0, strict=False)
+    assert s.interval_s == 60.0 and len(s.tpa) == 1
+    # the collapse happened entirely inside the blind window: unseen
+    assert s.tpa[0] == pytest.approx(0.4, abs=0.02)
+    # the same collapse IS visible at a compliant 30 s interval
+    be2 = SimulatedDeviceBackend(_profile(0.4), events=[ev], seed=4)
+    s2 = scrape(be2, 60.0, 30.0)
+    assert s2.tpa[0] == pytest.approx(0.04, abs=0.01)
+    # fast intervals never warn
+    be3 = SimulatedDeviceBackend(_profile(0.4), seed=4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        scrape(be3, 60.0, 30.0)
+
+
+def test_subsample_alignment():
+    """Table I methodology: subsample(k) must keep the LAST reading of
+    every k-window (point-sample semantics), drop the ragged tail, and
+    compose multiplicatively."""
+    n = 61                      # deliberately not a multiple of k
+    s = ScrapeSeries(2.0, np.arange(n, dtype=float), 1000.0 + np.arange(n))
+    s5 = s.subsample(5)
+    assert s5.interval_s == 10.0
+    assert len(s5.tpa) == len(s5.clock_mhz) == 12
+    np.testing.assert_array_equal(s5.tpa, np.arange(4, n - 1, 5))
+    # clock stays aligned with tpa sample-for-sample
+    np.testing.assert_array_equal(s5.clock_mhz - 1000.0, s5.tpa)
+    # two-stage 2x3 equals the matching slice of the 1x6 subsample
+    s6a = s.subsample(2).subsample(3)
+    s6b = s.subsample(6)
+    assert s6a.interval_s == s6b.interval_s == 12.0
+    np.testing.assert_array_equal(s6a.tpa[:len(s6b.tpa)], s6b.tpa)
 
 
 def test_clock_sampling_noise_shrinks_with_interval():

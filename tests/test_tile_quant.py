@@ -2,8 +2,7 @@
 EXACTLY (0-FLOP error — tighter than the paper's <1000-FLOP nvJet match)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings, st
 
 from repro.core.tile_quant import (TilePolicy, correction_factor,
                                    effective_dims, overhead, pick_policy,
