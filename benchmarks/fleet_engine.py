@@ -1,11 +1,14 @@
-"""Fleet-engine throughput: vectorized vs per-device scalar simulation.
+"""Fleet-engine throughput: vectorized vs per-device scalar simulation,
+and the fused multi-job grid vs the per-job engine loop.
 
 Metric is simulated device-seconds per wall-second — how much fleet
 telemetry one CPU core can synthesize in real time.  The scalar reference
 is timed on a small slice (it is the thing being replaced); the vectorized
 engine is then timed head-to-head on the same slice AND at the paper's
-operating point (1,000 devices x 1 hour at 30 s scrapes).  Emits a BENCH
-json line with the headline numbers for the driver.
+operating point (1,000 devices x 1 hour at 30 s scrapes).  The fused case
+runs a 600-job / ~10k-device sweep through `simulate_fleet` both ways
+(per-job loop vs one padded multi-job grid).  Emits BENCH json lines with
+the headline numbers for the driver.
 """
 from __future__ import annotations
 
@@ -25,6 +28,19 @@ from repro.telemetry.scrape import scrape
 PROFILE = StepProfile(mxu_time_s=0.84, step_time_s=2.0)
 EVENTS = [Event(start_s=600, end_s=1200, slowdown=2.5)]
 INTERVAL_S = 30.0
+
+
+def _sweep_specs(n_jobs: int = 600, max_devices: int = 17):
+    """The §V-B-scale sweep: 600 jobs, ~10k sampled devices, ragged
+    durations, a few evented/straggling jobs."""
+    return [JobSpec(f"sweep-{i}", "granite-3-2b", chips=max_devices,
+                    true_duty=0.2 + 0.03 * (i % 8),
+                    duration_s=600.0 + 150.0 * (i % 4),
+                    scrape_interval_s=INTERVAL_S, seed=i,
+                    events=[Event(300, 600, slowdown=2.5)] if i % 50 == 0
+                    else (),
+                    straggler_sigma=0.15 if i % 25 == 0 else 0.0)
+            for i in range(n_jobs)]
 
 
 def _scalar(n_dev: int, duration_s: float) -> None:
@@ -79,6 +95,42 @@ def run() -> list[Row]:
         "speedup_x": round(speedup, 1),
         "fleet_1000dev_1h_wall_s": round(wall_s, 3),
         "fleet_devsec_per_s": round(thr_full),
+    }))
+
+    # -- fused multi-job grid: 600 jobs / ~10k devices, one padded pass ----
+    # interleaved (per-job, fused) pairs + median pair ratio, so machine
+    # load drift hits both sides of the comparison equally
+    max_dev = 17
+    specs = _sweep_specs(600, max_dev)
+    devsec_sweep = sum(min(s.chips, max_dev) * s.duration_s for s in specs)
+    tels = simulate_fleet(specs, max_devices=max_dev)        # warm caches
+    pairs = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        simulate_fleet(specs, max_devices=max_dev, engine="vector")
+        t1 = time.perf_counter()
+        simulate_fleet(specs, max_devices=max_dev, engine="fused")
+        pairs.append((t1 - t0, time.perf_counter() - t1))
+    us_perjob = min(p[0] for p in pairs) * 1e6
+    us_fused = min(p[1] for p in pairs) * 1e6
+    ratios = sorted(pj / f for pj, f in pairs)
+    fused_speedup = ratios[len(ratios) // 2]
+    thr_fused = devsec_sweep / (us_fused / 1e6)
+    n_dev_total = sum(t.grid.n_devices for t in tels)
+    rows.append(Row("fleet_engine.perjob_600job_sweep", us_perjob,
+                    f"device_seconds_per_wall_s="
+                    f"{devsec_sweep / (us_perjob / 1e6):.0f}"))
+    rows.append(Row("fleet_engine.fused_600job_sweep", us_fused,
+                    f"device_seconds_per_wall_s={thr_fused:.0f} "
+                    f"speedup={fused_speedup:.1f}x devices={n_dev_total}"))
+    print("BENCH " + json.dumps({
+        "name": "fleet_engine_fused",
+        "jobs": len(specs),
+        "devices": n_dev_total,
+        "perjob_wall_s": round(us_perjob / 1e6, 3),
+        "fused_wall_s": round(us_fused / 1e6, 3),
+        "fused_speedup_x": round(fused_speedup, 1),
+        "fused_devsec_per_s": round(thr_fused),
     }))
     return rows
 

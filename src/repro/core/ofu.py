@@ -103,6 +103,37 @@ def hist_percentile(edges: np.ndarray, counts: np.ndarray,
     return float(edges[i] + frac * (edges[i + 1] - edges[i]))
 
 
+def hist_percentile_grid(edges: np.ndarray, counts: np.ndarray,
+                         qs: Sequence[float]) -> np.ndarray:
+    """Vectorized `hist_percentile` over a stack of histograms.
+
+    counts: (B, bins) weighted histograms (one row per time bucket);
+    qs: percentiles (0–100).  Returns (len(qs), B) — every bucket's
+    percentile read out in one cumulative-sum pass, NaN where a bucket is
+    empty.  Semantics match the scalar readout exactly (linear
+    interpolation within the containing bin).
+    """
+    counts = np.asarray(counts, float)
+    edges = np.asarray(edges, float)
+    B, bins = counts.shape
+    qs_arr = np.clip(np.asarray(qs, float), 0.0, 100.0)
+    if B == 0 or len(qs_arr) == 0:
+        return np.empty((len(qs_arr), B))
+    cum = np.cumsum(counts, axis=1)                      # (B, bins)
+    total = cum[:, -1]
+    target = total[None, :] * qs_arr[:, None] / 100.0    # (Q, B)
+    # first bin with cum >= target (per-row searchsorted, side='left')
+    i = np.minimum((cum[None, :, :] < target[:, :, None]).sum(axis=2),
+                   bins - 1)                             # (Q, B)
+    rows = np.arange(B)[None, :]
+    prev = np.where(i > 0, cum[rows, np.maximum(i - 1, 0)], 0.0)
+    c = counts[rows, i]
+    frac = np.where(c > 0, (target - prev) / np.where(c > 0, c, 1.0), 0.0)
+    out = edges[i] + frac * (edges[i + 1] - edges[i])
+    out[:, total <= 0] = np.nan
+    return out
+
+
 def pearson_r(a: Sequence[float], b: Sequence[float]) -> float:
     a, b = np.asarray(a, float), np.asarray(b, float)
     a = a - a.mean()

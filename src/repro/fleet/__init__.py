@@ -1,15 +1,57 @@
-from repro.fleet.divergence import DivergenceReport, JobPoint, analyze  # noqa: F401
-from repro.fleet.engine import (  # noqa: F401
-    DeviceGrid, EngineParams, simulate_devices,
-)
-from repro.fleet.goodput import FleetRollup, rollup  # noqa: F401
-from repro.fleet.jobs import (  # noqa: F401
-    JobSpec, JobTelemetry, build_profile, simulate_fleet, simulate_job,
-)
-from repro.fleet.streaming import (  # noqa: F401
-    BucketStats, StreamingRollup, precision_label,
-)
-from repro.fleet.recovery import (  # noqa: F401
-    RecoveryAction, RecoveryService, StragglerMonitor,
-)
-from repro.fleet.regression import Regression, detect_regressions  # noqa: F401
+"""Fleet layer: job simulation, streaming/distributed rollups, divergence
+triage, regression detection + recovery, goodput.
+
+Exports resolve lazily (PEP 562) so the replay/live telemetry path —
+`import repro.fleet.streaming` + detectors driven by a TraceReplaySource —
+never drags the generative simulator (engine/jobs) into the process.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+_EXPORTS = {
+    "DivergenceReport": "repro.fleet.divergence",
+    "JobPoint": "repro.fleet.divergence",
+    "analyze": "repro.fleet.divergence",
+    "analyze_rollup": "repro.fleet.divergence",
+    # defined in the telemetry layer — resolving it must not load the
+    # simulator (engine re-exports it only for back-compat)
+    "DeviceGrid": "repro.telemetry.scrape",
+    "EngineParams": "repro.fleet.engine",
+    "JobSlot": "repro.fleet.engine",
+    "simulate_devices": "repro.fleet.engine",
+    "simulate_jobs_fused": "repro.fleet.engine",
+    "FleetRollup": "repro.fleet.goodput",
+    "rollup": "repro.fleet.goodput",
+    "JobSpec": "repro.fleet.jobs",
+    "JobTelemetry": "repro.fleet.jobs",
+    "build_profile": "repro.fleet.jobs",
+    "simulate_fleet": "repro.fleet.jobs",
+    "simulate_job": "repro.fleet.jobs",
+    "BucketStats": "repro.fleet.streaming",
+    "StreamingRollup": "repro.fleet.streaming",
+    "precision_label": "repro.fleet.streaming",
+    "host_partition": "repro.fleet.distributed",
+    "tree_reduce": "repro.fleet.distributed",
+    "RecoveryAction": "repro.fleet.recovery",
+    "RecoveryService": "repro.fleet.recovery",
+    "StragglerMonitor": "repro.fleet.recovery",
+    "Regression": "repro.fleet.regression",
+    "detect_regressions": "repro.fleet.regression",
+    "scan_rollup": "repro.fleet.regression",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    val = getattr(import_module(mod), name)
+    globals()[name] = val
+    return val
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

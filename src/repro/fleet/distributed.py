@@ -1,0 +1,55 @@
+"""Distributed rollup reduction: per-host rollups → one fleet dashboard.
+
+`StreamingRollup` is a monoid element — per-bucket histogram weights and
+value sums ADD — so any reduction tree over per-host rollups reproduces
+single-process ingestion bucket for bucket.  This module models the
+multi-host wiring: each host folds only its own devices' scrapes into a
+local rollup, ships the fixed-size `to_bytes()` snapshot (kilobytes,
+independent of device count), and `tree_reduce` folds the snapshots level
+by level — raw scrapes never leave their host.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.fleet.streaming import StreamingRollup
+
+
+def _empty_like(roll: StreamingRollup) -> StreamingRollup:
+    return StreamingRollup(roll.bucket_s, bins=roll.bins,
+                           lo=float(roll.edges[0]), hi=float(roll.edges[-1]))
+
+
+def host_partition(items: Sequence, n_hosts: int) -> list:
+    """Round-robin items (specs, telemetries, device ids) across hosts."""
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts={n_hosts} must be >= 1")
+    return [list(items[h::n_hosts]) for h in range(n_hosts)]
+
+
+def tree_reduce(rollups: Sequence, *, fanin: int = 2) -> StreamingRollup:
+    """Reduce per-host rollups to one fleet rollup, `fanin` at a time.
+
+    Elements may be StreamingRollup objects or their `to_bytes()` blobs
+    (deserialized on arrival, as a reducer host would).  Inputs are never
+    mutated; the result is a fresh rollup.  Because merge is associative
+    and commutative, every (fanin, ordering) choice yields bucketwise-
+    identical fleet stats.
+    """
+    if fanin < 2:
+        raise ValueError(f"fanin={fanin} must be >= 2")
+    level = [StreamingRollup.from_bytes(r)
+             if isinstance(r, (bytes, bytearray)) else r for r in rollups]
+    if not level:
+        raise ValueError("tree_reduce needs at least one rollup")
+    if len(level) == 1:
+        return _empty_like(level[0]).merge(level[0])
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level), fanin):
+            acc = _empty_like(level[i])
+            for r in level[i:i + fanin]:
+                acc.merge(r)
+            nxt.append(acc)
+        level = nxt
+    return level[0]

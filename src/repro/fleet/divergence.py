@@ -83,3 +83,15 @@ def analyze(jobs: list, *, flag_rel_err: float = 0.30) -> DivergenceReport:
         frac_over_20pp=float(np.mean(err > 0.20)),
         by_scale=by_scale,
     )
+
+
+def analyze_rollup(roll, *, flag_rel_err: float = 0.30) -> DivergenceReport:
+    """Triage straight off a StreamingRollup (simulated, replayed, or
+    tree-reduced): uses the rollup's per-job OFU plus the app-reported MFU
+    registered at ingest (add_job, or add_grid(app_mfu=...) for traces)."""
+    pts = roll.to_job_points()
+    if not pts:
+        raise ValueError(
+            "rollup has no jobs with app-MFU metadata; ingest via add_job "
+            "or add_grid(app_mfu=...) before divergence triage")
+    return analyze(pts, flag_rel_err=flag_rel_err)

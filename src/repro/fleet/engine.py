@@ -5,15 +5,22 @@ The scalar `SimulatedDeviceBackend` advances one device one poll at a time
 tops out at a few hundred device-minutes per wall-second.  The paper's
 fleet scenarios (608 jobs, thousands of GPUs, hours of scrapes) need four
 orders of magnitude more.  This engine simulates the SAME generative model
-as batched NumPy array ops over an (n_devices, n_samples) grid:
+as batched NumPy array ops, at two fusion levels:
 
-  * duty integration: one (D, S, n_sub) grid evaluation via
-    `telemetry.counters.duty_grid` (vectorized event masks), averaged over
-    the hardware window — replacing D×S Python polls;
-  * clock: one batched OU pass (`ClockModel.simulate_batch`) whose
-    recurrence loops only over time sub-steps, never over devices;
-  * per-step jitter: a single (D, S) lognormal draw matching the scalar
-    backend's effective averaging count.
+  * `simulate_devices` — one device group (one job) as an
+    (n_devices, n_samples) grid: duty via `telemetry.counters.duty_grid`
+    (vectorized event masks) averaged over the hardware window, clock via
+    one batched OU pass (`ClockModel.simulate_batch`), per-step jitter as
+    a single lognormal draw.
+  * `simulate_jobs_fused` — a whole MULTI-JOB fleet stacked into one
+    padded (total_devices, S_max) grid.  Ragged job durations pad to the
+    longest job and are sliced back on output (OU padding sits at the tail
+    of each row, so valid samples are untouched); jobs are grouped by
+    (scrape interval, clock-model constants) so each group shares one time
+    grid, one jitter draw, and ONE batched OU recurrence — the per-group
+    Python cost is O(S_max × K) regardless of job count.  Event-free jobs
+    skip the duty sub-sample grid entirely (their deterministic duty is
+    constant in time); evented jobs evaluate it device-batched.
 
 The scalar backend remains the reference implementation; equivalence is
 statistical (same seed/profile ⇒ matching tpa/clock statistics within
@@ -21,7 +28,6 @@ tolerance), covered by tests/test_fleet_engine.py.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -29,41 +35,37 @@ import numpy as np
 
 from repro.core.peaks import DEFAULT_CHIP, ChipSpec
 from repro.telemetry.clock import ClockModel
-from repro.telemetry.counters import (MAX_HW_AVG_WINDOW_S, Event, StepProfile,
-                                      duty_grid, event_factors)
-from repro.telemetry.scrape import ScrapeSeries
+from repro.telemetry.counters import (Event, StepProfile,
+                                      check_scrape_interval, event_factors)
+from repro.telemetry.scrape import DeviceGrid  # noqa: F401  (re-export)
 
 
 @dataclass
 class EngineParams:
-    """Fidelity knobs for the vectorized path."""
+    """Fidelity knobs for the vectorized path.
+
+    (A clock_substeps knob existed through PR 1; it is gone because the OU
+    drive — duty at window ends — is piecewise-constant within a scrape
+    interval, so `simulate_batch`'s exact discretization takes ONE step
+    per scrape sample and sub-steps only ever added intermediate clipping
+    >10σ from the clip bounds.)
+    """
 
     n_sub_max: int = 64          # duty sub-samples per averaging window
-    clock_substeps_max: int = 16  # OU sub-steps per scrape interval
 
 
 @dataclass
-class DeviceGrid:
-    """Batched scrape result: row d is device d's aligned counter series."""
+class JobSlot:
+    """One job's slot in a fused multi-job grid (the engine-level view:
+    no configs, no FLOPs — just the step profile and its timeline)."""
 
+    profile: StepProfile
+    duration_s: float
     interval_s: float
-    tpa: np.ndarray              # (n_devices, n_samples)
-    clock_mhz: np.ndarray        # (n_devices, n_samples)
-
-    @property
-    def n_devices(self) -> int:
-        return self.tpa.shape[0]
-
-    @property
-    def times_s(self) -> np.ndarray:
-        """Poll instants (window ends) shared by every device."""
-        return (np.arange(self.tpa.shape[1]) + 1) * self.interval_s
-
-    def series(self, d: int) -> ScrapeSeries:
-        return ScrapeSeries(self.interval_s, self.tpa[d], self.clock_mhz[d])
-
-    def to_series_list(self) -> list:
-        return [self.series(d) for d in range(self.n_devices)]
+    events: Sequence[Event] = ()
+    stragglers: Optional[np.ndarray] = None   # (n_devices,); default: [1.0]
+    chip: ChipSpec = DEFAULT_CHIP
+    clock_model: Optional[ClockModel] = None
 
 
 def simulate_devices(profile: StepProfile, *, duration_s: float,
@@ -73,66 +75,138 @@ def simulate_devices(profile: StepProfile, *, duration_s: float,
                      events: Sequence[Event] = (),
                      stragglers=None, n_devices: int = 1,
                      seed: int = 0,
-                     params: EngineParams = EngineParams()) -> DeviceGrid:
+                     params: Optional[EngineParams] = None) -> DeviceGrid:
     """Simulate a whole device group's counter streams in one shot.
 
     stragglers: optional (n_devices,) per-device step-time multipliers;
     defaults to 1.0 everywhere.  All devices share the step profile and
     event timeline (the per-job model `simulate_job` uses); straggler
     spread is the per-device degree of freedom.
+
+    Implemented as a single-slot fused pass — `simulate_jobs_fused` is the
+    one grid evaluator, whether one job or six hundred.
     """
-    cm = clock_model or ClockModel(chip=chip)
     if stragglers is None:
         stragglers = np.ones(n_devices)
     stragglers = np.asarray(stragglers, float)
     if n_devices not in (1, len(stragglers)):
         raise ValueError(f"n_devices={n_devices} conflicts with "
                          f"len(stragglers)={len(stragglers)}")
-    D = len(stragglers)
-    S = int(duration_s / interval_s)
-    if S <= 0:
-        return DeviceGrid(interval_s, np.empty((D, 0)), np.empty((D, 0)))
+    slot = JobSlot(profile, duration_s, interval_s, events=events,
+                   stragglers=stragglers, chip=chip, clock_model=clock_model)
+    return simulate_jobs_fused([slot], seed=seed, params=params)[0]
+
+
+def simulate_jobs_fused(slots: Sequence[JobSlot], *, seed: int = 0,
+                        params: Optional[EngineParams] = None
+                        ) -> list[DeviceGrid]:
+    """Simulate many jobs as fused multi-job grids; one DeviceGrid per slot.
+
+    Jobs sharing (scrape interval, clock-model constants) fuse into one
+    padded (total_devices, S_max) grid with shared RNG streams; the result
+    list is aligned with `slots` regardless of grouping.
+    """
+    params = params or EngineParams()
     rng = np.random.default_rng(seed)
-    t_end = (np.arange(S) + 1.0) * interval_s
-    avg_w = min(interval_s, MAX_HW_AVG_WINDOW_S)
-    if interval_s > MAX_HW_AVG_WINDOW_S:
-        # same degraded-mode semantics (and warning) as non-strict scrape():
-        # each sample only reflects the trailing 30 s of its interval
-        warnings.warn(
-            f"scrape interval {interval_s}s exceeds the "
-            f"{MAX_HW_AVG_WINDOW_S}s hardware averaging window "
-            "(average-of-averages, paper §IV-C); readings only cover the "
-            f"trailing {MAX_HW_AVG_WINDOW_S}s of each interval",
-            RuntimeWarning, stacklevel=2)
+    out: list = [None] * len(slots)
+    groups: dict = {}
+    for i, sl in enumerate(slots):
+        cm = sl.clock_model or ClockModel(chip=sl.chip)
+        key = (float(sl.interval_s), cm.theta, cm.sigma_mhz,
+               cm.throttle_frac, cm.f_min_frac, cm.chip.f_max_mhz)
+        groups.setdefault(key, []).append((i, sl, cm))
+    for members in groups.values():
+        _simulate_group(members, out, rng, params)
+    return out
+
+
+def _simulate_group(members, out, rng, params: EngineParams) -> None:
+    """One fused pass over all jobs sharing an interval + clock model."""
+    interval = float(members[0][1].interval_s)
+    cm = members[0][2]
+    strag_list = [np.ones(1) if sl.stragglers is None
+                  else np.atleast_1d(np.asarray(sl.stragglers, float))
+                  for _, sl, _ in members]
+    n_dev = np.array([len(s) for s in strag_list])
+    S = np.array([max(int(sl.duration_s / interval), 0)
+                  for _, sl, _ in members])
+    S_max = int(S.max())
+    if S_max <= 0:
+        for (i, _, _), st in zip(members, strag_list):
+            out[i] = DeviceGrid(interval, np.empty((len(st), 0)),
+                                np.empty((len(st), 0)))
+        return
+    avg_w = check_scrape_interval(interval, strict=False)
+
+    J = len(members)
+    step = np.array([sl.profile.step_time_s for _, sl, _ in members])
+    mxu = np.array([sl.profile.mxu_time_s for _, sl, _ in members])
+    jit = np.array([sl.profile.jitter for _, sl, _ in members])
+    # same effective sub-sample count as the scalar backend (per job)
+    n_eff = np.clip(avg_w / np.maximum(step / 4, 1e-3), 8, 4096).astype(int)
+    has_ev = np.array([bool(sl.events) for _, sl, _ in members])
+    dev_job = np.repeat(np.arange(J), n_dev)          # (D,) row -> job
+    strag = np.concatenate(strag_list)                # (D,)
+    D = len(strag)
+    t_end = (np.arange(S_max) + 1.0) * interval
 
     # --- duty: hardware-averaged over the trailing window -----------------
-    # same effective sub-sample count as the scalar backend, capped for the
-    # (D, S, n_sub) grid's memory footprint
-    n_eff = int(np.clip(avg_w / max(profile.step_time_s / 4, 1e-3),
-                        8, 4096))
-    n_sub = min(n_eff, params.n_sub_max)
-    offs = (np.arange(n_sub) / n_sub) * avg_w
-    ts = (t_end[:, None] - avg_w) + offs[None, :]            # (S, n_sub)
-    duty = duty_grid(profile, ts[None, :, :],
-                     straggler=stragglers[:, None, None],
-                     events=events)                          # (D, S, n_sub)
-    tpa = duty.mean(axis=2)
+    # the whole tpa pipeline runs float32: counters are duty fractions in
+    # [0, 1], so 1e-7 relative granularity is noise-free headroom, and the
+    # grid passes move half the bytes
+    ratio = (mxu / step).astype(np.float32)           # full-rate duty (J,)
+    strag32 = strag.astype(np.float32)
+    tpa = np.empty((D, S_max), dtype=np.float32)
+    plain = ~has_ev[dev_job]
+    # no events -> deterministic duty is constant in time: skip the sub grid
+    tpa[plain] = np.minimum(np.float32(1.0), ratio[dev_job][plain]
+                            / strag32[plain])[:, None]
+    if has_ev.any():
+        ev_jobs = np.flatnonzero(has_ev)
+        n_sub = int(min(params.n_sub_max, n_eff[ev_jobs].max()))
+        offs = (np.arange(n_sub) / n_sub) * avg_w
+        ts = (t_end[:, None] - avg_w) + offs[None, :]  # (S_max, n_sub)
+        row_off = np.concatenate([[0], np.cumsum(n_dev)])
+        # one bounded (S_max, n_sub) base grid per evented job, device
+        # rows in bounded blocks — resident memory scales with neither
+        # job count nor device count
+        block = max(1, 2 ** 24 // (S_max * n_sub))
+        for j in ev_jobs:
+            slow, scale = event_factors(members[j][1].events, ts)
+            base_j = ((mxu[j] * scale)
+                      / (step[j] * slow)).astype(np.float32)
+            for b0 in range(row_off[j], row_off[j + 1], block):
+                rb = slice(b0, min(b0 + block, row_off[j + 1]))
+                duty = base_j[None, :, :] / strag32[rb, None, None]
+                np.minimum(duty, np.float32(1.0), out=duty)
+                tpa[rb] = duty.mean(axis=2, dtype=np.float32)
     # one lognormal draw per (device, sample) with the scalar path's
-    # mean-of-n-jittered-subsamples dispersion (σ ≈ jitter / n_eff)
-    tpa = tpa * np.exp(rng.standard_normal((D, S))
-                       * profile.jitter / n_eff)
+    # mean-of-n-jittered-subsamples dispersion (σ ≈ jitter / n_eff) —
+    # a single shared stream for the whole group
+    jitter = rng.standard_normal((D, S_max), dtype=np.float32)
+    jitter *= (jit / n_eff).astype(np.float32)[dev_job][:, None]
+    np.exp(jitter, out=jitter)
+    tpa *= jitter
     np.clip(tpa, 0.0, 1.0, out=tpa)
 
-    # --- clock: batched OU point samples at window ends -------------------
-    slow_e, scale_e = event_factors(events, t_end - 1e-6)    # (S,)
-    duty_end = np.minimum(
-        1.0, (profile.mxu_time_s * scale_e)[None, :]
-        / (profile.step_time_s * slow_e)[None, :]
-        / stragglers[:, None])                               # (D, S)
-    K = int(np.clip(round(cm.theta * interval_s * 2), 1,
-                    params.clock_substeps_max))
-    duty_sub = np.repeat(duty_end, K, axis=1)                # (D, S*K)
-    clk = cm.simulate_batch(duty_sub, dt_s=interval_s / K,
-                            seed=int(rng.integers(0, 2 ** 31)))
-    clock = np.ascontiguousarray(clk[:, K - 1::K])
-    return DeviceGrid(interval_s, tpa, clock)
+    # --- clock: ONE batched OU pass for every device of every job ---------
+    base_end = np.broadcast_to(ratio[:, None], (J, S_max)).copy()
+    for j in np.flatnonzero(has_ev):
+        slow_e, scale_e = event_factors(members[j][1].events, t_end - 1e-6)
+        base_end[j] = (mxu[j] * scale_e) / (step[j] * slow_e)
+    duty_end = base_end[dev_job]
+    duty_end /= strag32[:, None]
+    np.minimum(duty_end, np.float32(1.0), out=duty_end)             # (D, S)
+    # exact OU discretization: one step per scrape sample (the drive is
+    # constant within each interval, so no sub-stepping is needed)
+    clock = cm.simulate_batch(duty_end, dt_s=interval,
+                              seed=int(rng.integers(0, 2 ** 31)))
+
+    row0 = 0
+    for (i, _, _), nd, Sj in zip(members, n_dev, S):
+        # copies (cheap vs the simulation) so holding one job's telemetry
+        # never pins the whole group's padded arrays in memory
+        out[i] = DeviceGrid(interval,
+                            np.ascontiguousarray(tpa[row0:row0 + nd, :Sj]),
+                            np.ascontiguousarray(clock[row0:row0 + nd, :Sj]))
+        row0 += nd

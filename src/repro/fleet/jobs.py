@@ -10,6 +10,7 @@ application-reported MFU computed from the (possibly wrong) FLOPs counter.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import cached_property
 from typing import Optional, Sequence
 
 import numpy as np
@@ -19,8 +20,9 @@ from repro.core.ofu import effective_peak, ofu_mean
 from repro.core.peaks import DEFAULT_CHIP, ChipSpec
 from repro.core.tile_quant import pick_policy, profiled_flops, theoretical_flops
 from repro.flops.accounting import step_flops
-from repro.telemetry.counters import Event, SimulatedDeviceBackend, StepProfile
-from repro.telemetry.scrape import ScrapeSeries, scrape
+from repro.telemetry.counters import (Event, SimulatedDeviceBackend,
+                                      StepProfile, check_scrape_interval)
+from repro.telemetry.scrape import DeviceGrid, ScrapeSeries, scrape
 
 
 @dataclass
@@ -47,18 +49,23 @@ class JobSpec:
 @dataclass
 class JobTelemetry:
     spec: JobSpec
-    device_series: list                # per sampled device: ScrapeSeries
+    grid: DeviceGrid                   # sampled devices' aligned counters
     app_mfu: float                     # what the framework reports (Eq. 10)
     app_mfu_exact: float               # with a correct FLOPs counter
     step_time_s: float
     executed_tflops_per_step: float
 
+    @cached_property
+    def device_series(self) -> list:
+        """Per sampled device: ScrapeSeries (materialized lazily from the
+        grid — fleet sweeps that stay on the batched path never pay for
+        per-device objects)."""
+        return self.grid.to_series_list()
+
     @property
     def ofu(self) -> float:
         """Job-level OFU per Eq. 11 (mean over devices × samples)."""
-        vals = [ofu_mean(s.tpa, s.clock_mhz, self.spec.chip)
-                for s in self.device_series]
-        return float(np.mean(vals))
+        return ofu_mean(self.grid.tpa, self.grid.clock_mhz, self.spec.chip)
 
 
 def _tile_quant_factor(cfg, chip: ChipSpec) -> float:
@@ -70,8 +77,49 @@ def _tile_quant_factor(cfg, chip: ChipSpec) -> float:
     return float(np.mean(f))
 
 
+#: (workload fields) -> (StepProfile, app_mfu, app_mfu_exact).  The
+#: derivation is deterministic, and a 600-job fleet sweep reuses a few
+#: dozen distinct workloads — memoizing keeps profile math off the
+#: fused path's critical path.
+_PROFILE_CACHE: dict = {}
+_CACHE_CAP = 65536
+
+
+def _cache_put(cache: dict, key, val):
+    """Insert with FIFO eviction — long-lived collector processes must
+    not grow memoization state without bound."""
+    if len(cache) >= _CACHE_CAP:
+        cache.pop(next(iter(cache)))
+    cache[key] = val
+    return val
+
+
 def build_profile(spec: JobSpec) -> tuple[StepProfile, float, float]:
-    """Derive the per-device step profile + app-reported MFUs for a job."""
+    """Derive the per-device step profile + app-reported MFUs for a job.
+
+    Memoized on the spec's workload fields (arch/shape/chips/FLOPs
+    variant/precisions/duty/chip); each call returns a FRESH StepProfile
+    so callers may tweak theirs without poisoning the cache.
+    """
+    chip = spec.chip
+    key = (spec.arch, spec.shape, spec.chips, spec.flops_variant,
+           spec.remat, spec.true_duty,
+           # every ChipSpec field the profile math reads — name alone
+           # would alias customized chips onto the stock entry
+           chip.name, chip.num_mxu, chip.mxu_rows, chip.mxu_cols,
+           chip.flops_per_macc, chip.f_max_mhz,
+           tuple(sorted(chip.precision_mult.items())),
+           tuple(sorted(spec.precisions.items())))
+    hit = _PROFILE_CACHE.get(key)
+    if hit is None:
+        hit = _cache_put(_PROFILE_CACHE, key, _build_profile_uncached(spec))
+    prof, app, app_exact = hit
+    return (StepProfile(prof.mxu_time_s, prof.step_time_s,
+                        dict(prof.flops_by_precision), prof.jitter),
+            app, app_exact)
+
+
+def _build_profile_uncached(spec: JobSpec) -> tuple[StepProfile, float, float]:
     cfg = get_config(spec.arch)
     shape = SHAPES[spec.shape]
     chip = spec.chip
@@ -103,6 +151,44 @@ def build_profile(spec: JobSpec) -> tuple[StepProfile, float, float]:
     return prof, float(app), float(app_exact)
 
 
+#: (seed, straggler_sigma, n_dev) -> (stragglers, seed vector): the draws
+#: are a pure function of the spec, so repeated sweeps over the same specs
+#: skip thousands of Generator constructions.
+_DRAW_CACHE: dict = {}
+
+
+def _job_draws(seed: int, sigma: float, n_dev: int):
+    key = (seed, sigma, n_dev)
+    hit = _DRAW_CACHE.get(key)
+    if hit is None:
+        rng = np.random.default_rng(seed)
+        stragglers = np.exp(rng.standard_normal(n_dev) * sigma)
+        # seeds[0] feeds the batched engines; seeds[1 + d] device d's
+        # scalar backend
+        seeds = rng.integers(0, 2 ** 31, size=n_dev + 1)
+        hit = _cache_put(_DRAW_CACHE, key, (stragglers, seeds))
+    return hit
+
+
+def _prep_job(spec: JobSpec, max_devices: int):
+    """Per-spec setup shared by every engine: §IV-C check, profile math,
+    and the job's straggler/seed draws (same RNG stream on every path)."""
+    # same §IV-C policy scrape() enforces on the scalar path — all
+    # engines must reject average-of-averages configs identically
+    check_scrape_interval(spec.scrape_interval_s)
+    prof, app, app_exact = build_profile(spec)
+    n_dev = min(spec.chips, max_devices)
+    stragglers, seeds = _job_draws(spec.seed, spec.straggler_sigma, n_dev)
+    return prof, app, app_exact, stragglers, seeds
+
+
+def _telemetry(spec: JobSpec, prof: StepProfile, app: float,
+               app_exact: float, grid: DeviceGrid) -> JobTelemetry:
+    executed_tflops = sum(prof.flops_by_precision.values()) / 1e12
+    return JobTelemetry(spec, grid, app, app_exact, prof.step_time_s,
+                        executed_tflops)
+
+
 def simulate_job(spec: JobSpec, max_devices: int = 4, *,
                  engine: str = "auto") -> JobTelemetry:
     """Simulate the job's observable counter streams.
@@ -114,56 +200,76 @@ def simulate_job(spec: JobSpec, max_devices: int = 4, *,
     tests/test_fleet_engine.py.
     """
     from repro.fleet.engine import simulate_devices
-    from repro.telemetry.counters import MAX_HW_AVG_WINDOW_S
 
-    if spec.scrape_interval_s > MAX_HW_AVG_WINDOW_S:
-        # same §IV-C policy scrape() enforces on the scalar path — both
-        # engines must reject average-of-averages configs identically
-        raise ValueError(
-            f"scrape interval {spec.scrape_interval_s}s exceeds the "
-            f"{MAX_HW_AVG_WINDOW_S}s hardware averaging window "
-            "(average-of-averages, paper §IV-C)")
-    prof, app, app_exact = build_profile(spec)
-    rng = np.random.default_rng(spec.seed)
-    n_dev = min(spec.chips, max_devices)
-    if engine == "auto":
+    prof, app, app_exact, stragglers, seeds = _prep_job(spec, max_devices)
+    if engine in ("auto", "fused"):
+        # a single job's fused grid degenerates to the per-job batched pass
         engine = "vector"
     if engine == "vector":
-        stragglers = np.exp(rng.standard_normal(n_dev)
-                            * spec.straggler_sigma)
         grid = simulate_devices(
             prof, duration_s=spec.duration_s,
             interval_s=spec.scrape_interval_s, chip=spec.chip,
             events=spec.events, stragglers=stragglers,
-            seed=int(rng.integers(0, 2 ** 31)))
-        series = grid.to_series_list()
+            seed=int(seeds[0]))
     elif engine == "scalar":
         series = []
-        for d in range(n_dev):
-            straggle = float(np.exp(rng.standard_normal()
-                                    * spec.straggler_sigma))
+        for d, straggle in enumerate(stragglers):
             be = SimulatedDeviceBackend(
                 prof, chip=spec.chip, events=spec.events,
-                straggler_factor=straggle,
-                seed=int(rng.integers(0, 2 ** 31)))
+                straggler_factor=float(straggle),
+                seed=int(seeds[1 + d]))
             series.append(scrape(be, spec.duration_s,
                                  spec.scrape_interval_s))
+        grid = DeviceGrid.from_series(series)
     else:
         raise ValueError(f"unknown engine {engine!r} "
-                         "(expected 'auto', 'vector' or 'scalar')")
-    executed_tflops = sum(prof.flops_by_precision.values()) / 1e12
-    return JobTelemetry(spec, series, app, app_exact, prof.step_time_s,
-                        executed_tflops)
+                         "(expected 'auto', 'fused', 'vector' or 'scalar')")
+    return _telemetry(spec, prof, app, app_exact, grid)
+
+
+def _simulate_fleet_fused(specs: Sequence[JobSpec],
+                          max_devices: int) -> list[JobTelemetry]:
+    from repro.fleet.engine import JobSlot, simulate_jobs_fused
+
+    slots, meta, entropy = [], [], []
+    for spec in specs:
+        prof, app, app_exact, stragglers, seeds = _prep_job(spec, max_devices)
+        slots.append(JobSlot(prof, spec.duration_s, spec.scrape_interval_s,
+                             events=spec.events, stragglers=stragglers,
+                             chip=spec.chip))
+        meta.append((spec, prof, app, app_exact))
+        entropy.append(int(seeds[0]))
+    # one master seed for the fused grid's shared RNG streams, derived
+    # deterministically from every job's own stream
+    seed = int(np.random.default_rng(entropy or [0]).integers(0, 2 ** 31))
+    grids = simulate_jobs_fused(slots, seed=seed)
+    return [_telemetry(spec, prof, app, app_exact, g)
+            for (spec, prof, app, app_exact), g in zip(meta, grids)]
 
 
 def simulate_fleet(specs: Sequence[JobSpec], *, max_devices: int = 4,
                    engine: str = "auto") -> list[JobTelemetry]:
-    """Simulate a whole fleet of jobs (one batched engine pass per job).
+    """Simulate a whole fleet of jobs.
 
-    This is the §V-B/§VI entry point: thousands of devices × hours of
-    scrapes complete in seconds on CPU, so the paper's fleet scenarios
-    (608-job correlation, 2.5× regression hunts, mixed-precision tracking)
-    run at full scale instead of on a sampled handful of devices.
+    engine: 'fused' (default under 'auto') stacks EVERY job into padded
+    (total_devices, S_max) multi-job grids — shared RNG streams, one duty
+    evaluation and one batched OU pass per (interval, clock-model) group —
+    so the §V-B/§VI scenarios (608-job correlation sweeps, 2.5× regression
+    hunts) cost one grid pass instead of a Python loop of per-job passes.
+    'vector' keeps the per-job batched pass, 'scalar' the per-device
+    reference loop; all three draw from the same generative model
+    (equivalence: tests/test_fleet_engine.py).
+
+    Reproducibility semantics: the fused grid's jitter/clock noise comes
+    from ONE stream seeded by the whole sweep, so a job's exact counter
+    realization is deterministic given (specs, order) but not a pure
+    function of its own JobSpec.seed.  To re-simulate one job of a sweep
+    bit-for-bit on its own (e.g. to bisect a regression), use
+    engine='vector', whose streams are per-job.
     """
+    if engine == "auto":
+        engine = "fused"
+    if engine == "fused":
+        return _simulate_fleet_fused(specs, max_devices)
     return [simulate_job(s, max_devices=max_devices, engine=engine)
             for s in specs]

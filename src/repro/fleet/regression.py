@@ -54,3 +54,18 @@ def detect_regressions(ofu: np.ndarray, *, window: int = 10,
         low = float(np.mean(lows))
         out.append(Regression(in_reg, None, ref / max(low, 1e-9), ref, low))
     return out
+
+
+def scan_rollup(roll, **detector_kw) -> dict[str, list[Regression]]:
+    """Run the detector over every job series in a rollup (simulated,
+    replayed, or tree-reduced from many hosts — the detector never knows).
+
+    Returns {job_id: regressions} for jobs with at least one detection —
+    the sweep a fleet dashboard performs after each reduction round.
+    """
+    out = {}
+    for jid in roll.jobs:
+        regs = detect_regressions(roll.job_ofu(jid), **detector_kw)
+        if regs:
+            out[jid] = regs
+    return out

@@ -5,17 +5,25 @@ fleet scale).
 State per (scope, time-bucket) is a fixed-size weighted histogram, so
 memory is O(buckets × scopes), independent of device count or scrape rate
 — a 5,888-GPU job streams through the same few kilobytes a 8-GPU job does.
-Readouts go through `core.ofu.hist_percentile`; per-job bucket means feed
-the existing `regression.detect_regressions` detector unchanged, and
+Readouts go through `core.ofu.hist_percentile_grid`; per-job bucket means
+feed the existing `regression.detect_regressions` detector unchanged, and
 `to_job_points` bridges into `divergence.analyze`.
+
+Rollups are distributed-ready monoid elements: per-bucket histograms and
+weighted sums ADD, so `merge()` is associative and commutative by
+construction, and `to_bytes()`/`from_bytes()` ship a host's rollup to a
+reducer (`fleet.distributed.tree_reduce`) without moving raw scrapes.
 """
 from __future__ import annotations
 
+import io
+import json
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.ofu import hist_percentile, ofu_series
+from repro.core.ofu import hist_percentile_grid, ofu_series
+from repro.core.peaks import DEFAULT_CHIP, ChipSpec
 
 _FLEET = "__fleet__"
 
@@ -90,19 +98,91 @@ class StreamingRollup:
 
     def add_job(self, tel, *, group: str | None = None) -> None:
         """Ingest a JobTelemetry: every sampled device's OFU series,
-        chip-weighted so each job contributes its full fleet footprint."""
+        chip-weighted so each job contributes its full fleet footprint.
+        (A thin wrapper over the source-agnostic add_grid.)"""
         spec = tel.spec
-        group = group or precision_label(spec.precisions)
-        n_dev = len(tel.device_series)
-        w = spec.chips / max(n_dev, 1)
-        self._job_meta[spec.job_id] = {
-            "chips": spec.chips, "app_mfu": tel.app_mfu, "arch": spec.arch,
-            "flops_variant": spec.flops_variant}
-        for s in tel.device_series:
-            t = (np.arange(len(s.tpa)) + 1.0) * s.interval_s
-            self.observe(spec.job_id, t,
-                         ofu_series(s.tpa, s.clock_mhz, spec.chip),
-                         group=group, weight=w)
+        self.add_grid(spec.job_id, tel.grid, chip=spec.chip,
+                      group=group or precision_label(spec.precisions),
+                      chips=spec.chips, app_mfu=tel.app_mfu, arch=spec.arch,
+                      flops_variant=spec.flops_variant)
+
+    def add_grid(self, job_id: str, grid, *, chip: ChipSpec = DEFAULT_CHIP,
+                 group: str = "unknown", chips: int | None = None,
+                 app_mfu: float | None = None, arch: str = "unknown",
+                 flops_variant: str = "exact") -> None:
+        """Ingest a DeviceGrid from ANY TelemetrySource — the
+        source-agnostic twin of add_job, used when counters come from a
+        replayed trace or a live poller instead of a simulated JobSpec.
+
+        chips: the job's true device count for chip-weighting (defaults to
+        the grid's sampled device count); app_mfu (with arch /
+        flops_variant) registers the metadata `to_job_points` needs for
+        divergence triage.
+        """
+        chips = grid.n_devices if chips is None else chips
+        if app_mfu is not None:
+            self._job_meta[job_id] = {
+                "chips": chips, "app_mfu": float(app_mfu), "arch": arch,
+                "flops_variant": flops_variant}
+        ofu = ofu_series(grid.tpa, grid.clock_mhz, chip)
+        self.observe(job_id, np.broadcast_to(grid.times_s, ofu.shape), ofu,
+                     group=group, weight=chips / max(grid.n_devices, 1))
+
+    # -- distribution: merge + wire format ----------------------------------
+    def merge(self, other: "StreamingRollup") -> "StreamingRollup":
+        """Fold another rollup into this one (in place; returns self).
+
+        Per-bucket histogram weights and value sums ADD, so merge is
+        associative and commutative by construction — any reduction tree
+        over per-host rollups yields the same fleet state as single-
+        process ingestion.
+        """
+        if (self.bucket_s != other.bucket_s or self.bins != other.bins
+                or not np.array_equal(self.edges, other.edges)):
+            raise ValueError("cannot merge rollups with different "
+                             "bucketing (bucket_s/bins/edges must match)")
+        n = max(self.n_buckets, other.n_buckets)
+        for scope, oh in other._hists.items():
+            h, s = self._scope_arrays(scope, n)
+            h[:oh.shape[0]] += oh
+            s[:oh.shape[0]] += other._sums[scope]
+        for jid, m in other._job_meta.items():
+            self._job_meta.setdefault(jid, dict(m))
+        return self
+
+    def to_bytes(self) -> bytes:
+        """Self-contained snapshot (compressed npz): what a host ships to
+        the tree reducer instead of its raw scrapes."""
+        meta = {"bucket_s": self.bucket_s, "bins": self.bins,
+                "n_buckets": self.n_buckets,
+                "scopes": [list(k) for k in self._hists],
+                "job_meta": self._job_meta}
+        arrays = {"edges": self.edges,
+                  "meta": np.frombuffer(
+                      json.dumps(meta, default=lambda o: o.item()).encode(),
+                      dtype=np.uint8)}
+        for idx, scope in enumerate(self._hists):
+            arrays[f"h{idx}"] = self._hists[scope]
+            arrays[f"s{idx}"] = self._sums[scope]
+        buf = io.BytesIO()
+        np.savez_compressed(buf, **arrays)
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "StreamingRollup":
+        with np.load(io.BytesIO(blob)) as z:
+            meta = json.loads(bytes(z["meta"]).decode())
+            edges = z["edges"]
+            roll = cls(meta["bucket_s"], bins=meta["bins"],
+                       lo=float(edges[0]), hi=float(edges[-1]))
+            roll.edges = edges.copy()
+            roll.n_buckets = int(meta["n_buckets"])
+            for idx, key in enumerate(meta["scopes"]):
+                scope = tuple(key)
+                roll._hists[scope] = z[f"h{idx}"].copy()
+                roll._sums[scope] = z[f"s{idx}"].copy()
+            roll._job_meta = meta["job_meta"]
+        return roll
 
     # -- readout ------------------------------------------------------------
     def _stats(self, scope, qs=(10, 50, 90)) -> BucketStats:
@@ -117,8 +197,9 @@ class StreamingRollup:
         w = h.sum(axis=1)
         with np.errstate(invalid="ignore", divide="ignore"):
             mean = np.where(w > 0, s / np.maximum(w, 1e-12), np.nan)
-        pct = {q: np.array([hist_percentile(self.edges, h[b], q)
-                            for b in range(h.shape[0])]) for q in qs}
+        # all buckets × all percentiles in one cumulative-sum readout
+        grid = hist_percentile_grid(self.edges, h, tuple(qs))
+        pct = {q: grid[k] for k, q in enumerate(qs)}
         return BucketStats(self.bucket_s, mean, w, pct)
 
     def job_stats(self, job_id: str, qs=(10, 50, 90)) -> BucketStats:

@@ -1,6 +1,11 @@
 from repro.telemetry.clock import ClockModel  # noqa: F401
 from repro.telemetry.counters import (  # noqa: F401
     MAX_HW_AVG_WINDOW_S, CounterBackend, Event, SimulatedDeviceBackend,
-    StepProfile, TpuProfilerBackend, duty_grid, event_factors,
+    StepProfile, TpuProfilerBackend, check_scrape_interval, duty_grid,
+    event_factors,
 )
-from repro.telemetry.scrape import ScrapeSeries, scrape  # noqa: F401
+from repro.telemetry.scrape import DeviceGrid, ScrapeSeries, scrape  # noqa: F401
+from repro.telemetry.source import (  # noqa: F401
+    BackendSource, SimulatorSource, TelemetrySource, TraceReplaySource,
+    read_trace, write_trace,
+)

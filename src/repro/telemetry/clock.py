@@ -65,20 +65,32 @@ class ClockModel:
         recurrence is over T only; all device math is vectorized, which is
         what makes fleet-scale simulation tractable.
         """
-        duty = np.asarray(duty, float)
+        duty = np.asarray(duty)
+        if duty.dtype != np.float32:      # clock resolution: f32 ≈ 1e-4 MHz
+            duty = duty.astype(float, copy=False)  # fleet grids pass f32;
+        dt = duty.dtype                   # scalar callers keep f64
         D, T = duty.shape
         rng = np.random.default_rng(seed)
         a = np.exp(-self.theta * dt_s)
         sd = self.sigma_mhz * np.sqrt(max(1e-12, 1 - a * a))
-        mu = self.mean_clock(duty)                      # (D, T)
-        noise = rng.standard_normal((D, T))
+        # time-major layout so every recurrence step touches contiguous
+        # memory, with the non-recurrent terms (μ(1−a) + σ·dW) folded into
+        # one precomputed drive array — the loop is 3 in-place ops per step.
+        # μ·(1−a) expands to c1 − c2·duty, built transposed in two passes.
+        drive = np.empty((T, D), dtype=dt)
+        np.multiply(duty.T, -self.chip.f_max_mhz * self.throttle_frac
+                    * (1.0 - a), out=drive)
+        cur = self.mean_clock(duty[:, 0].copy()) if f0 is None else \
+            np.broadcast_to(np.asarray(f0, dt), (D,)).astype(dt)
+        drive += self.chip.f_max_mhz * (1.0 - a)
+        # float32 N(0,1) draws: σ·dW granularity ~1e-5 MHz, far below the
+        # 32 MHz noise floor, and generation is ~2× faster at fleet scale
+        drive += sd * rng.standard_normal((T, D), dtype=np.float32)
         f_min = self.chip.f_max_mhz * self.f_min_frac
-        cur = mu[:, 0].copy() if f0 is None else \
-            np.broadcast_to(np.asarray(f0, float), (D,)).copy()
-        f = np.empty((D, T))
+        f = np.empty((T, D), dtype=dt)
         for t in range(T):
-            m = mu[:, t]
-            cur = m + (cur - m) * a + sd * noise[:, t]
+            cur *= a
+            cur += drive[t]
             np.clip(cur, f_min, self.chip.f_max_mhz, out=cur)
-            f[:, t] = cur
-        return f
+            f[t] = cur
+        return np.ascontiguousarray(f.T)

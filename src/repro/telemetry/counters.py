@@ -13,6 +13,7 @@ against real TPU counters (`TpuProfilerBackend`, deploy target).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -24,6 +25,27 @@ from repro.telemetry.clock import ClockModel
 #: DCGM averages tensor-pipe activity over at most this window (paper §IV-C);
 #: scraping slower than this produces an average-of-averages.
 MAX_HW_AVG_WINDOW_S = 30.0
+
+
+def check_scrape_interval(interval_s: float, *, strict: bool = True,
+                          stacklevel: int = 3) -> float:
+    """Enforce the §IV-C rule shared by every scrape path (scalar scrape
+    loop, vectorized engine, fused fleet grid).
+
+    Returns the effective hardware averaging window.  strict=True raises
+    on intervals beyond MAX_HW_AVG_WINDOW_S; strict=False degrades with a
+    RuntimeWarning — each reading then only reflects the trailing window.
+    """
+    if interval_s > MAX_HW_AVG_WINDOW_S:
+        msg = (f"scrape interval {interval_s}s exceeds the "
+               f"{MAX_HW_AVG_WINDOW_S}s hardware averaging window "
+               "(average-of-averages, paper §IV-C)")
+        if strict:
+            raise ValueError(msg)
+        warnings.warn(msg + "; readings only cover the trailing "
+                      f"{MAX_HW_AVG_WINDOW_S}s of each interval",
+                      RuntimeWarning, stacklevel=stacklevel)
+    return min(interval_s, MAX_HW_AVG_WINDOW_S)
 
 
 @dataclass

@@ -1,0 +1,207 @@
+"""Telemetry sources: one interface over simulated, replayed, and live
+counter streams (the source-agnostic pipeline behind the paper's §V-B
+fleet dashboards).
+
+Every source answers `scrapes() -> DeviceGrid`; everything downstream —
+`StreamingRollup`, `detect_regressions`, `divergence.analyze` — consumes
+that grid and never learns whether the samples came from the vectorized
+engine (`SimulatorSource`), a per-poll `CounterBackend` loop
+(`BackendSource`, the adapter point for live DCGM/libtpu pollers), or a
+recorded trace (`TraceReplaySource`).  Deploying against real hardware
+telemetry means adding one more source, not touching the pipeline.
+
+Trace format (CSV with header, or JSONL — one record per line):
+
+    t_s,device,tpa,clock_mhz
+    30.0,0,0.412,1328.5
+
+`write_trace`/`read_trace` round-trip a `DeviceGrid` exactly (floats are
+serialized at full repr precision).
+"""
+from __future__ import annotations
+
+import csv
+import json
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.peaks import DEFAULT_CHIP, ChipSpec
+from repro.telemetry.counters import (CounterBackend, Event, StepProfile,
+                                      check_scrape_interval)
+from repro.telemetry.scrape import DeviceGrid, scrape
+
+
+class TelemetrySource:
+    """Interface: scrapes() -> DeviceGrid (aligned counter series)."""
+
+    def scrapes(self) -> DeviceGrid:
+        raise NotImplementedError
+
+
+@dataclass
+class SimulatorSource(TelemetrySource):
+    """Generative source: one batched vectorized-engine pass."""
+
+    profile: StepProfile
+    duration_s: float
+    interval_s: float
+    chip: ChipSpec = DEFAULT_CHIP
+    events: Sequence[Event] = ()
+    stragglers: Optional[np.ndarray] = None
+    n_devices: int = 1
+    seed: int = 0
+    strict: bool = True          # same §IV-C policy as BackendSource
+
+    def scrapes(self) -> DeviceGrid:
+        # sources are interchangeable, so they enforce §IV-C identically:
+        # strict=True rejects average-of-averages intervals up front
+        # (strict=False leaves the engine's own degraded-mode warning)
+        if self.strict:
+            check_scrape_interval(self.interval_s)
+        # the engine sits a layer above telemetry; import at call time so
+        # replay/live deployments never load the simulator
+        from repro.fleet.engine import simulate_devices
+        return simulate_devices(
+            self.profile, duration_s=self.duration_s,
+            interval_s=self.interval_s, chip=self.chip, events=self.events,
+            stragglers=self.stragglers, n_devices=self.n_devices,
+            seed=self.seed)
+
+
+@dataclass
+class BackendSource(TelemetrySource):
+    """Adapter over scalar `CounterBackend`s: one poll loop per device.
+
+    This is the shape a live poller takes — hand it N DCGM/libtpu-backed
+    backends and the rest of the pipeline runs unchanged.
+    """
+
+    backends: Sequence[CounterBackend]
+    duration_s: float
+    interval_s: float
+    strict: bool = True
+
+    def scrapes(self) -> DeviceGrid:
+        return DeviceGrid.from_series(
+            [scrape(be, self.duration_s, self.interval_s, strict=self.strict)
+             for be in self.backends])
+
+
+@dataclass
+class TraceReplaySource(TelemetrySource):
+    """Replays recorded (t_s, device, tpa, clock_mhz) scrapes from disk."""
+
+    path: str
+    fmt: str = "auto"            # 'csv' | 'jsonl' | 'auto' (by suffix)
+    interval_s: Optional[float] = None   # required for 1-sample traces
+
+    def scrapes(self) -> DeviceGrid:
+        return read_trace(self.path, fmt=self.fmt,
+                          interval_s=self.interval_s)
+
+
+_FIELDS = ("t_s", "device", "tpa", "clock_mhz")
+
+
+def _resolve_fmt(path: str, fmt: str) -> str:
+    if fmt != "auto":
+        if fmt not in ("csv", "jsonl"):
+            raise ValueError(f"unknown trace format {fmt!r}")
+        return fmt
+    low = str(path).lower()
+    if low.endswith(".csv"):
+        return "csv"
+    if low.endswith((".jsonl", ".ndjson", ".json")):
+        return "jsonl"
+    raise ValueError(f"cannot infer trace format from {path!r}; "
+                     "pass fmt='csv' or 'jsonl'")
+
+
+def write_trace(grid: DeviceGrid, path: str, *, fmt: str = "auto") -> None:
+    """Record a DeviceGrid as a replayable scrape trace (CSV or JSONL)."""
+    fmt = _resolve_fmt(path, fmt)
+    # bulk-convert once (tolist yields Python floats, repr-exact) instead
+    # of a per-cell numpy-scalar conversion — fleet grids are millions of
+    # samples and the trace writer must not dwarf the ~ms simulation
+    tpa = grid.tpa.astype(float).tolist()
+    clk = grid.clock_mhz.astype(float).tolist()
+    with open(path, "w", newline="") as fh:
+        if fmt == "csv":
+            times = [repr(t) for t in grid.times_s.tolist()]
+            w = csv.writer(fh)
+            w.writerow(_FIELDS)
+            w.writerows((t, d, repr(a), repr(c))
+                        for d in range(grid.n_devices)
+                        for t, a, c in zip(times, tpa[d], clk[d]))
+        else:
+            times_f = grid.times_s.tolist()
+            fh.writelines(
+                json.dumps({"t_s": t, "device": d, "tpa": a,
+                            "clock_mhz": c}) + "\n"
+                for d in range(grid.n_devices)
+                for t, a, c in zip(times_f, tpa[d], clk[d]))
+
+
+def read_trace(path: str, *, fmt: str = "auto",
+               interval_s: Optional[float] = None) -> DeviceGrid:
+    """Load a scrape trace back into an aligned DeviceGrid.
+
+    Requires a rectangular trace: every device sampled the same number of
+    times (what any fixed-interval scraper produces; per-device timestamp
+    jitter is fine — samples align by poll rank).  The scrape interval is
+    inferred from the poll-instant spacing unless given explicitly; a
+    single-poll trace cannot be inferred and needs interval_s.
+    """
+    fmt = _resolve_fmt(path, fmt)
+    recs = []
+    with open(path, newline="") as fh:
+        if fmt == "csv":
+            rd = csv.reader(fh)
+            header = next(rd, None)
+            if header is not None:
+                col = {name: k for k, name in enumerate(header)}
+                missing = [f for f in _FIELDS if f not in col]
+                if missing:
+                    raise ValueError(f"trace {path!r} header is missing "
+                                     f"column(s) {missing}")
+                it, id_, ia, ic = (col[f] for f in _FIELDS)
+                recs = [(float(row[it]), int(row[id_]),
+                         float(row[ia]), float(row[ic])) for row in rd]
+        else:
+            for line in fh:
+                if not line.strip():
+                    continue
+                r = json.loads(line)
+                recs.append((float(r["t_s"]), int(r["device"]),
+                             float(r["tpa"]), float(r["clock_mhz"])))
+    if not recs:
+        return DeviceGrid(0.0, np.empty((0, 0)), np.empty((0, 0)))
+    # align samples by per-device time RANK, not exact timestamp equality:
+    # real pollers jitter a few ms between devices, but a fixed-interval
+    # scraper still yields one sample per device per poll round
+    by_dev: dict = {}
+    for t, d, a, c in recs:
+        by_dev.setdefault(d, []).append((t, a, c))
+    devices = sorted(by_dev)
+    counts = {len(by_dev[d]) for d in devices}
+    if len(counts) != 1:
+        raise ValueError(f"ragged trace {path!r}: devices have differing "
+                         f"sample counts {sorted(counts)}")
+    for d in devices:
+        by_dev[d].sort(key=lambda r: r[0])
+    times = np.array([r[0] for r in by_dev[devices[0]]])
+    if interval_s is not None:
+        interval = float(interval_s)
+    elif len(times) > 1:
+        interval = float(np.median(np.diff(times)))
+    else:
+        raise ValueError(
+            f"trace {path!r} has a single poll instant; the scrape "
+            "interval cannot be inferred — pass interval_s explicitly")
+    tpa = np.array([[r[1] for r in by_dev[d]] for d in devices])
+    clk = np.array([[r[2] for r in by_dev[d]] for d in devices])
+    # preserve the recorded clock: a mid-run trace (first poll at t≫0)
+    # must land in the rollup buckets of the times it was captured at
+    return DeviceGrid(interval, tpa, clk, t0_s=float(times[0]) - interval)

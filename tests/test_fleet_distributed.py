@@ -1,0 +1,137 @@
+"""Distributed rollups: merge is associative/commutative, the wire format
+round-trips, and tree-reducing per-host rollups is bucketwise identical to
+single-process ingestion (no raw scrapes centralized)."""
+import numpy as np
+import pytest
+
+from repro.fleet.distributed import host_partition, tree_reduce
+from repro.fleet.jobs import JobSpec, simulate_fleet
+from repro.fleet.streaming import StreamingRollup
+from repro.telemetry import Event
+
+
+def _random_rollup(seed, n_obs=5, bucket_s=60.0):
+    rng = np.random.default_rng(seed)
+    roll = StreamingRollup(bucket_s=bucket_s)
+    for k in range(n_obs):
+        t = rng.uniform(1, 900, size=rng.integers(3, 40))
+        v = rng.uniform(0, 1.05, size=len(t))
+        roll.observe(f"job{rng.integers(4)}", t, v,
+                     group=("bf16", "fp8")[int(rng.integers(2))],
+                     weight=float(rng.integers(1, 64)))
+    return roll
+
+
+def _assert_same_state(a: StreamingRollup, b: StreamingRollup,
+                       atol=1e-12) -> None:
+    assert set(a._hists) == set(b._hists)
+    assert a.n_buckets == b.n_buckets
+    for scope in a._hists:
+        ha, hb = a._hists[scope], b._hists[scope]
+        np.testing.assert_allclose(np.pad(ha, ((0, a.n_buckets - ha.shape[0]),
+                                               (0, 0))),
+                                   np.pad(hb, ((0, b.n_buckets - hb.shape[0]),
+                                               (0, 0))), atol=atol)
+        np.testing.assert_allclose(np.pad(a._sums[scope],
+                                          (0, a.n_buckets - len(a._sums[scope]))),
+                                   np.pad(b._sums[scope],
+                                          (0, b.n_buckets - len(b._sums[scope]))),
+                                   atol=atol)
+
+
+def _merged(*rolls):
+    out = StreamingRollup.from_bytes(rolls[0].to_bytes())
+    for r in rolls[1:]:
+        out.merge(r)
+    return out
+
+
+def test_merge_commutative():
+    a, b = _random_rollup(1), _random_rollup(2)
+    _assert_same_state(_merged(a, b), _merged(b, a))
+
+
+def test_merge_associative():
+    a, b, c = (_random_rollup(s) for s in (3, 4, 5))
+    left = _merged(_merged(a, b), c)
+    right = _merged(a, _merged(b, c))
+    _assert_same_state(left, right)
+    # inputs untouched by the copies
+    _assert_same_state(a, _random_rollup(3))
+
+
+def test_merge_rejects_mismatched_bucketing():
+    a = StreamingRollup(bucket_s=60)
+    with pytest.raises(ValueError, match="bucketing"):
+        a.merge(StreamingRollup(bucket_s=300))
+    with pytest.raises(ValueError, match="bucketing"):
+        a.merge(StreamingRollup(bucket_s=60, bins=64))
+
+
+def test_serialization_roundtrip():
+    roll = _random_rollup(9)
+    roll._job_meta["job1"] = {"chips": 64, "app_mfu": 0.4, "arch": "dense",
+                              "flops_variant": "exact"}
+    back = StreamingRollup.from_bytes(roll.to_bytes())
+    _assert_same_state(roll, back, atol=0.0)      # wire format is lossless
+    assert back._job_meta == roll._job_meta
+    assert back.bucket_s == roll.bucket_s and back.bins == roll.bins
+    np.testing.assert_array_equal(back.edges, roll.edges)
+    f0, f1 = roll.fleet_stats(), back.fleet_stats()
+    np.testing.assert_array_equal(f0.mean, f1.mean)
+    np.testing.assert_array_equal(f0.percentiles[50], f1.percentiles[50])
+
+
+def test_tree_reduce_matches_single_process_ingestion():
+    """The acceptance property: per-host rollups reduced tree-wise give
+    the same fleet dashboard as ingesting every job on one process."""
+    specs = [JobSpec(f"j{i}", "granite-3-2b", chips=32,
+                     true_duty=0.2 + 0.03 * (i % 8),
+                     duration_s=600 + 300 * (i % 3), seed=i,
+                     events=[Event(300, 600, slowdown=2.0)] if i == 5 else ())
+             for i in range(12)]
+    tels = simulate_fleet(specs, max_devices=4)
+    single = StreamingRollup(bucket_s=120)
+    for t in tels:
+        single.add_job(t)
+    hosts = host_partition(tels, 5)
+    assert [len(h) for h in hosts] == [3, 3, 2, 2, 2]
+    blobs = []
+    for host_tels in hosts:
+        local = StreamingRollup(bucket_s=120)
+        for t in host_tels:
+            local.add_job(t)
+        blobs.append(local.to_bytes())            # ship kilobytes, not scrapes
+    for fanin in (2, 3, 16):
+        fleet = tree_reduce(blobs, fanin=fanin)
+        _assert_same_state(single, fleet)
+        assert sorted(fleet.jobs) == sorted(single.jobs)
+        fs, ss = fleet.fleet_stats(), single.fleet_stats()
+        np.testing.assert_allclose(fs.mean, ss.mean, atol=1e-12)
+        for q in (10, 50, 90):
+            np.testing.assert_allclose(fs.percentiles[q], ss.percentiles[q],
+                                       atol=1e-12)
+        # the reduced dashboard still answers per-job queries
+        np.testing.assert_allclose(fleet.job_ofu("j5"), single.job_ofu("j5"),
+                                   atol=1e-12)
+
+
+def test_analyze_rollup_requires_app_mfu_metadata():
+    from repro.fleet.divergence import analyze_rollup
+
+    roll = _random_rollup(11)                 # observed without metadata
+    with pytest.raises(ValueError, match="app-MFU metadata"):
+        analyze_rollup(roll)
+
+
+def test_tree_reduce_edge_cases():
+    a = _random_rollup(7)
+    lone = tree_reduce([a])
+    _assert_same_state(a, lone)
+    assert lone is not a                          # inputs never mutated
+    with pytest.raises(ValueError, match="at least one"):
+        tree_reduce([])
+    with pytest.raises(ValueError, match="fanin"):
+        tree_reduce([a], fanin=1)
+    with pytest.raises(ValueError, match="n_hosts"):
+        host_partition([1, 2], 0)

@@ -1,14 +1,17 @@
 """Vectorized fleet engine: statistical equivalence against the scalar
-reference backend, streaming-rollup correctness, and the fleet-scale
-performance contract (1,000 devices x 1 hour in seconds, not minutes)."""
+reference backend (and of the fused multi-job grid against the per-job
+loop), streaming-rollup correctness, and the fleet-scale performance
+contract (1,000 devices x 1 hour in seconds, not minutes)."""
 import time
 
 import numpy as np
 import pytest
 
-from repro.core.ofu import ofu_series
+from repro.core.ofu import hist_percentile, hist_percentile_grid, ofu_series
+from repro.core.peaks import TPU_V6E_LIKE
 from repro.fleet import (JobSpec, StreamingRollup, simulate_devices,
                          simulate_fleet, simulate_job)
+from repro.fleet.engine import EngineParams, JobSlot, simulate_jobs_fused
 from repro.fleet.regression import detect_regressions
 from repro.fleet.streaming import precision_label
 from repro.telemetry import Event, SimulatedDeviceBackend, StepProfile, scrape
@@ -99,8 +102,136 @@ def test_simulate_job_engines_agree():
 
 
 # ---------------------------------------------------------------------------
+# fused multi-job grid: one padded pass over the whole fleet
+# ---------------------------------------------------------------------------
+def _sweep_specs(n=24):
+    """Ragged sweep: mixed durations/duties, an evented job, a straggler."""
+    return [JobSpec(f"j{i}", "granite-3-2b", chips=16,
+                    true_duty=0.2 + 0.03 * (i % 8),
+                    duration_s=300.0 + 150.0 * (i % 4), seed=i,
+                    events=[Event(120, 360, slowdown=2.5)] if i % 7 == 0
+                    else (),
+                    straggler_sigma=0.2 if i % 5 == 0 else 0.0)
+            for i in range(n)]
+
+
+def test_fused_fleet_matches_per_job_loop():
+    """Same-seed tolerance test (acceptance): the fused default must be
+    statistically indistinguishable from the per-job engine loop."""
+    specs = _sweep_specs()
+    fused = simulate_fleet(specs, max_devices=4)          # default = fused
+    perjob = simulate_fleet(specs, max_devices=4, engine="vector")
+    for f, p in zip(fused, perjob):
+        assert f.app_mfu == p.app_mfu                     # shared profile math
+        assert f.ofu == pytest.approx(p.ofu, abs=0.01)
+        assert len(f.device_series) == len(p.device_series)
+        for sf, sp in zip(f.device_series, p.device_series):
+            assert sf.tpa.shape == sp.tpa.shape           # ragged S preserved
+            assert sf.interval_s == sp.interval_s
+
+
+def test_fused_is_the_default_and_deterministic():
+    specs = _sweep_specs(6)
+    a = simulate_fleet(specs)
+    b = simulate_fleet(specs, engine="fused")
+    for ta, tb in zip(a, b):
+        for sa, sb in zip(ta.device_series, tb.device_series):
+            np.testing.assert_array_equal(sa.tpa, sb.tpa)
+            np.testing.assert_array_equal(sa.clock_mhz, sb.clock_mhz)
+
+
+def test_fused_event_collapse_window_by_window():
+    """The 2.5x host-sync signature must appear in the fused grid exactly
+    where the per-job path puts it."""
+    ev = [Event(start_s=300, end_s=900, slowdown=2.5)]
+    specs = [JobSpec("quiet", "granite-3-2b", chips=8, true_duty=0.4,
+                     duration_s=900, seed=1),
+             JobSpec("gloo", "granite-3-2b", chips=8, true_duty=0.45,
+                     duration_s=900, seed=2, events=ev)]
+    quiet, gloo = simulate_fleet(specs, max_devices=8)
+    g = np.stack([s.tpa for s in gloo.device_series])
+    assert g[:, :10].mean() / g[:, 10:].mean() == pytest.approx(2.5,
+                                                                rel=0.05)
+    q = np.stack([s.tpa for s in quiet.device_series])
+    assert q[:, :10].mean() == pytest.approx(q[:, 10:].mean(), abs=0.01)
+
+
+def test_fused_groups_heterogeneous_intervals_and_chips():
+    """Jobs that cannot share a grid (different scrape interval or clock
+    domain) land in separate fused groups but one call still serves all."""
+    slots = [JobSlot(StepProfile(0.8, 2.0), 600, 30.0,
+                     stragglers=np.ones(3)),
+             JobSlot(StepProfile(0.8, 2.0), 600, 15.0,
+                     stragglers=np.ones(2)),
+             JobSlot(StepProfile(0.9, 2.0), 450, 30.0,
+                     chip=TPU_V6E_LIKE, stragglers=np.ones(4)),
+             JobSlot(StepProfile(0.5, 2.0), 10.0, 30.0)]   # S == 0
+    grids = simulate_jobs_fused(slots, seed=0)
+    assert [g.tpa.shape for g in grids] == [(3, 20), (2, 40), (4, 15),
+                                            (1, 0)]
+    assert grids[1].interval_s == 15.0
+    # each job's clock lives in its own chip's domain
+    assert grids[0].clock_mhz.max() <= 1500.0
+    assert grids[2].clock_mhz.mean() > 1500.0
+
+
+def test_fused_straggler_scaling():
+    slot = JobSlot(StepProfile(1.0, 2.0), 600, 30.0,
+                   stragglers=np.array([1.0, 2.0]))
+    (grid,) = simulate_jobs_fused([slot], seed=4)
+    assert grid.tpa[1].mean() == pytest.approx(grid.tpa[0].mean() / 2,
+                                               rel=0.05)
+
+
+def test_simulate_job_accepts_fused_and_profile_cache_not_chip_aliased():
+    import dataclasses
+
+    spec = JobSpec("one", "granite-3-2b", chips=8, true_duty=0.35,
+                   duration_s=300, seed=3)
+    fused = simulate_job(spec, max_devices=4, engine="fused")
+    vec = simulate_job(spec, max_devices=4, engine="vector")
+    np.testing.assert_array_equal(fused.grid.tpa, vec.grid.tpa)
+    # a customized chip must not alias the stock entry in the profile
+    # cache (same .name, different physics)
+    slow = dataclasses.replace(spec.chip, f_max_mhz=spec.chip.f_max_mhz / 2)
+    halved = simulate_job(dataclasses.replace(spec, chip=slow),
+                          max_devices=4)
+    assert halved.step_time_s == pytest.approx(vec.step_time_s * 2)
+
+
+def test_engine_params_default_not_shared():
+    """Regression guard for the mutable-default bug: each call constructs
+    its own EngineParams, and an explicit params object is honored."""
+    import inspect
+    sig = inspect.signature(simulate_devices)
+    assert sig.parameters["params"].default is None
+    grid = simulate_devices(StepProfile(0.8, 2.0), duration_s=300,
+                            interval_s=30.0, n_devices=2, seed=0,
+                            params=EngineParams(n_sub_max=8))
+    assert grid.tpa.shape == (2, 10)
+
+
+# ---------------------------------------------------------------------------
 # streaming rollup: buckets, percentiles, detector feeds
 # ---------------------------------------------------------------------------
+def test_hist_percentile_grid_matches_scalar_readout():
+    """Satellite: the vectorized per-bucket percentile readout must agree
+    with the scalar hist_percentile loop bucket for bucket."""
+    rng = np.random.default_rng(0)
+    edges = np.linspace(0.0, 1.1, 129)
+    h = rng.integers(0, 20, size=(12, 128)).astype(float) \
+        * rng.uniform(0.5, 64, size=(12, 1))
+    h[3] = 0.0                                   # an empty bucket row
+    h[7, :64] = 0.0
+    qs = (0, 10, 50, 90, 100)
+    grid = hist_percentile_grid(edges, h, qs)
+    assert grid.shape == (5, 12)
+    for k, q in enumerate(qs):
+        ref = [hist_percentile(edges, h[b], q) for b in range(12)]
+        np.testing.assert_allclose(grid[k], ref, atol=1e-12, equal_nan=True)
+    assert hist_percentile_grid(edges, np.empty((0, 128)), qs).shape == (5, 0)
+
+
 def test_rollup_percentiles_and_groups():
     specs = [
         JobSpec("lo", "granite-3-2b", chips=64, true_duty=0.2,

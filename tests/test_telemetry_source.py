@@ -1,0 +1,212 @@
+"""TelemetrySource abstraction: simulator/backend/replay sources all emit
+the same DeviceGrid, traces round-trip exactly through CSV and JSONL, and
+a recorded trace drives the full rollup + detector pipeline with no
+simulator (engine/jobs) import."""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.fleet.engine import simulate_devices
+from repro.fleet.regression import detect_regressions, scan_rollup
+from repro.fleet.streaming import StreamingRollup
+from repro.telemetry import (BackendSource, DeviceGrid, Event,
+                             SimulatedDeviceBackend, SimulatorSource,
+                             StepProfile, TraceReplaySource, read_trace,
+                             scrape, write_trace)
+
+PROF = StepProfile(mxu_time_s=0.8, step_time_s=2.0)
+
+
+def test_simulator_source_matches_engine():
+    src = SimulatorSource(PROF, duration_s=600, interval_s=30.0,
+                          n_devices=4, seed=3)
+    grid = src.scrapes()
+    ref = simulate_devices(PROF, duration_s=600, interval_s=30.0,
+                           n_devices=4, seed=3)
+    assert isinstance(grid, DeviceGrid)
+    np.testing.assert_array_equal(grid.tpa, ref.tpa)
+    np.testing.assert_array_equal(grid.clock_mhz, ref.clock_mhz)
+
+
+def test_sources_enforce_scrape_interval_identically():
+    """Interchangeable sources, one §IV-C policy: both reject an
+    average-of-averages interval by default; strict=False degrades."""
+    sim = SimulatorSource(PROF, duration_s=120, interval_s=60.0,
+                          n_devices=1, seed=0)
+    be = BackendSource([SimulatedDeviceBackend(PROF, seed=0)],
+                       duration_s=120, interval_s=60.0)
+    for src in (sim, be):
+        with pytest.raises(ValueError, match="average-of-averages"):
+            src.scrapes()
+    sim.strict = be.strict = False
+    for src in (sim, be):
+        with pytest.warns(RuntimeWarning, match="average-of-averages"):
+            assert src.scrapes().tpa.shape == (1, 2)
+
+
+def test_series_roundtrip_preserves_t0():
+    grid = simulate_devices(PROF, duration_s=300, interval_s=30.0,
+                            n_devices=2, seed=0)
+    shifted = DeviceGrid(grid.interval_s, grid.tpa, grid.clock_mhz,
+                         t0_s=900.0)
+    s = shifted.series(1)
+    assert s.t0_s == 900.0 and s.subsample(2).t0_s == 900.0
+    back = DeviceGrid.from_series(shifted.to_series_list())
+    assert back.t0_s == 900.0
+    np.testing.assert_allclose(back.times_s, shifted.times_s)
+
+
+def test_backend_source_matches_scalar_scrape():
+    src = BackendSource([SimulatedDeviceBackend(PROF, seed=s)
+                         for s in (1, 2)], duration_s=300, interval_s=30.0)
+    grid = src.scrapes()
+    assert grid.n_devices == 2 and grid.tpa.shape == (2, 10)
+    ref = scrape(SimulatedDeviceBackend(PROF, seed=1), 300, 30.0)
+    np.testing.assert_array_equal(grid.tpa[0], ref.tpa)
+    np.testing.assert_array_equal(grid.clock_mhz[0], ref.clock_mhz)
+
+
+def test_grid_series_stack_roundtrip():
+    grid = simulate_devices(PROF, duration_s=300, interval_s=30.0,
+                            n_devices=3, seed=0)
+    back = DeviceGrid.from_series(grid.to_series_list())
+    np.testing.assert_array_equal(back.tpa, grid.tpa)
+    assert back.interval_s == grid.interval_s
+    with pytest.raises(ValueError, match="misaligned"):
+        DeviceGrid.from_series([grid.series(0),
+                                grid.series(1).subsample(2)])
+
+
+@pytest.mark.parametrize("fmt,suffix", [("csv", ".csv"), ("jsonl", ".jsonl")])
+def test_trace_roundtrip_exact(tmp_path, fmt, suffix):
+    grid = simulate_devices(PROF, duration_s=600, interval_s=30.0,
+                            events=[Event(200, 400, slowdown=2.0)],
+                            n_devices=3, seed=7)
+    path = str(tmp_path / f"trace{suffix}")
+    write_trace(grid, path)                      # fmt inferred from suffix
+    replay = TraceReplaySource(path).scrapes()
+    assert replay.interval_s == grid.interval_s
+    np.testing.assert_array_equal(replay.tpa, grid.tpa)
+    np.testing.assert_array_equal(replay.clock_mhz, grid.clock_mhz)
+    # explicit fmt agrees with inference
+    explicit = read_trace(path, fmt=fmt)
+    np.testing.assert_array_equal(explicit.tpa, grid.tpa)
+
+
+def test_trace_format_validation(tmp_path):
+    grid = simulate_devices(PROF, duration_s=60, interval_s=30.0, seed=0)
+    with pytest.raises(ValueError, match="cannot infer"):
+        write_trace(grid, str(tmp_path / "trace.parquet"))
+    with pytest.raises(ValueError, match="unknown trace format"):
+        write_trace(grid, str(tmp_path / "t.csv"), fmt="xml")
+    # ragged trace (device 1 missing one poll) is rejected
+    p = tmp_path / "ragged.csv"
+    p.write_text("t_s,device,tpa,clock_mhz\n"
+                 "30.0,0,0.4,1300.0\n60.0,0,0.4,1300.0\n"
+                 "30.0,1,0.4,1300.0\n")
+    with pytest.raises(ValueError, match="ragged"):
+        read_trace(str(p))
+    # empty trace -> empty grid
+    q = tmp_path / "empty.jsonl"
+    q.write_text("")
+    assert read_trace(str(q)).n_devices == 0
+    # a single poll instant cannot pin down the interval: explicit only
+    one = tmp_path / "one.csv"
+    one.write_text("t_s,device,tpa,clock_mhz\n630.0,0,0.4,1300.0\n")
+    with pytest.raises(ValueError, match="single poll instant"):
+        read_trace(str(one))
+    g1 = TraceReplaySource(str(one), interval_s=30.0).scrapes()
+    assert g1.interval_s == 30.0 and g1.times_s[0] == pytest.approx(630.0)
+
+
+def test_trace_tolerates_per_device_timestamp_jitter(tmp_path):
+    """Real pollers stamp devices a few ms apart; alignment is by poll
+    rank, not exact float time equality."""
+    p = tmp_path / "jitter.csv"
+    p.write_text("t_s,device,tpa,clock_mhz\n"
+                 "30.001,0,0.40,1300.0\n60.002,0,0.41,1310.0\n"
+                 "30.003,1,0.42,1320.0\n59.999,1,0.43,1330.0\n")
+    grid = read_trace(str(p))
+    assert grid.tpa.shape == (2, 2)
+    np.testing.assert_allclose(grid.tpa, [[0.40, 0.41], [0.42, 0.43]])
+    assert grid.interval_s == pytest.approx(30.0, abs=0.01)
+
+
+def test_midrun_trace_replays_at_recorded_times(tmp_path):
+    """A trace sliced from the middle of a run must keep its clock: the
+    replayed samples land in the rollup buckets they were recorded in."""
+    from repro.fleet.streaming import StreamingRollup
+    from repro.telemetry.scrape import DeviceGrid
+
+    grid = simulate_devices(PROF, duration_s=600, interval_s=30.0,
+                            n_devices=2, seed=1)
+    shifted = DeviceGrid(grid.interval_s, grid.tpa, grid.clock_mhz,
+                         t0_s=600.0)                 # second 10 minutes
+    assert shifted.times_s[0] == pytest.approx(630.0)
+    path = str(tmp_path / "midrun.csv")
+    write_trace(shifted, path)
+    replay = read_trace(path)
+    np.testing.assert_allclose(replay.times_s, shifted.times_s)
+    np.testing.assert_array_equal(replay.tpa, shifted.tpa)
+    roll = StreamingRollup(bucket_s=300)
+    roll.add_grid("midrun", replay)
+    stats = roll.job_stats("midrun", qs=())
+    assert len(stats.mean) == 4                      # buckets 0-4 spanned
+    assert np.isnan(stats.mean[:2]).all()            # nothing before 600 s
+    assert np.isfinite(stats.mean[2:]).all()
+
+
+def test_replay_through_rollup_and_detectors(tmp_path):
+    """A recorded regression survives the disk round-trip: the replayed
+    trace trips the same detector the simulated grid does."""
+    grid = simulate_devices(PROF, duration_s=3600, interval_s=30.0,
+                            events=[Event(1800, 3600, slowdown=2.5)],
+                            n_devices=4, seed=11)
+    path = str(tmp_path / "regressed.jsonl")
+    write_trace(grid, path)
+    roll = StreamingRollup(bucket_s=120)
+    roll.add_grid("replayed", TraceReplaySource(path).scrapes(),
+                  group="bf16", chips=256, app_mfu=0.38)
+    found = scan_rollup(roll, factor_threshold=1.5)
+    assert list(found) == ["replayed"]
+    assert 2.0 < found["replayed"][0].factor < 2.6
+    # and the bridge to divergence carries the trace-supplied app MFU
+    (pt,) = roll.to_job_points()
+    assert pt.mfu == 0.38 and pt.chips == 256
+
+
+def test_replay_pipeline_needs_no_simulator(tmp_path):
+    """End-to-end acceptance: trace -> rollup -> regression + divergence in
+    a fresh interpreter that never imports the simulator (engine/jobs)."""
+    grid = simulate_devices(PROF, duration_s=3600, interval_s=30.0,
+                            events=[Event(1800, 3600, slowdown=2.5)],
+                            n_devices=2, seed=5)
+    path = tmp_path / "trace.csv"
+    write_trace(grid, str(path))
+    script = f"""
+import sys
+from repro.telemetry.source import TraceReplaySource
+from repro.fleet import DeviceGrid, StreamingRollup   # lazy: no simulator
+from repro.fleet.regression import scan_rollup
+from repro.fleet.divergence import analyze_rollup
+
+roll = StreamingRollup(bucket_s=120)
+roll.add_grid("traced", TraceReplaySource({str(path)!r}).scrapes(),
+              chips=128, app_mfu=0.38)
+regs = scan_rollup(roll, factor_threshold=1.5)
+rep = analyze_rollup(roll)
+assert "traced" in regs, "regression not detected from replayed trace"
+assert rep.flagged, "divergence triage missed the collapsed job"
+for banned in ("repro.fleet.engine", "repro.fleet.jobs"):
+    assert banned not in sys.modules, f"simulator leaked: {{banned}}"
+print("REPLAY_OK", round(regs["traced"][0].factor, 2))
+"""
+    src_dir = str(Path(__file__).resolve().parent.parent / "src")
+    res = subprocess.run([sys.executable, "-c", script],
+                         env={"PYTHONPATH": src_dir, "PATH": "/usr/bin:/bin"},
+                         capture_output=True, text=True)
+    assert res.returncode == 0, res.stderr
+    assert "REPLAY_OK" in res.stdout
