@@ -7,8 +7,10 @@ is timed on a small slice (it is the thing being replaced); the vectorized
 engine is then timed head-to-head on the same slice AND at the paper's
 operating point (1,000 devices x 1 hour at 30 s scrapes).  The fused case
 runs a 600-job / ~10k-device sweep through `simulate_fleet` both ways
-(per-job loop vs one padded multi-job grid).  Emits BENCH json lines with
-the headline numbers for the driver.
+(per-job loop vs one padded multi-job grid).  The collector case measures
+the continuous-monitoring loop's per-round overhead (scrape -> windowed
+ingest -> regression/divergence detect) for a 64-job fleet.  Emits BENCH
+json lines with the headline numbers for the driver.
 """
 from __future__ import annotations
 
@@ -18,12 +20,14 @@ import time
 import numpy as np
 
 from benchmarks.common import Row, timed
+from repro.fleet.collector import Collector, CollectorConfig, JobStream
 from repro.fleet.engine import simulate_devices
 from repro.fleet.jobs import JobSpec, simulate_fleet
 from repro.fleet.streaming import StreamingRollup
 from repro.telemetry.counters import (Event, SimulatedDeviceBackend,
                                       StepProfile)
 from repro.telemetry.scrape import scrape
+from repro.telemetry.source import SimulatorSource
 
 PROFILE = StepProfile(mxu_time_s=0.84, step_time_s=2.0)
 EVENTS = [Event(start_s=600, end_s=1200, slowdown=2.5)]
@@ -131,6 +135,43 @@ def run() -> list[Row]:
         "fused_wall_s": round(us_fused / 1e6, 3),
         "fused_speedup_x": round(fused_speedup, 1),
         "fused_devsec_per_s": round(thr_fused),
+    }))
+
+    # -- collector round overhead: scrape -> windowed ingest -> detect -----
+    # 64 monitored jobs x 16 devices, 5-minute rounds at 30 s scrapes: the
+    # continuous loop must be a rounding error next to the round period.
+    n_jobs, n_dev_c, round_s = 64, 16, 300.0
+    n_rounds = 12
+
+    def _collector_run():
+        streams = [JobStream(
+            f"mon-{i}",
+            SimulatorSource(PROFILE, duration_s=n_rounds * round_s,
+                            interval_s=INTERVAL_S, n_devices=n_dev_c,
+                            seed=i,
+                            events=EVENTS if i % 16 == 0 else ()),
+            chips=256, group="bf16", app_mfu=0.38)
+            for i in range(n_jobs)]
+        col = Collector(streams, CollectorConfig(
+            round_s=round_s, bucket_s=round_s, retain=8))
+        return col.run()
+
+    reports, us_total = timed(_collector_run, repeat=3)
+    us_round = us_total / n_rounds
+    samples_round = sum(r.samples for r in reports) / n_rounds
+    devsec_round = n_jobs * n_dev_c * round_s
+    thr_col = devsec_round / (us_round / 1e6)
+    rows.append(Row("fleet_engine.collector_round_64job", us_round,
+                    f"samples_per_round={samples_round:.0f} "
+                    f"device_seconds_per_wall_s={thr_col:.0f} "
+                    f"alerts={sum(len(r.alerts) for r in reports)}"))
+    print("BENCH " + json.dumps({
+        "name": "fleet_collector",
+        "jobs": n_jobs,
+        "devices": n_jobs * n_dev_c,
+        "rounds": n_rounds,
+        "round_ms": round(us_round / 1e3, 2),
+        "collector_devsec_per_s": round(thr_col),
     }))
     return rows
 

@@ -10,6 +10,15 @@ from __future__ import annotations
 from importlib import import_module
 
 _EXPORTS = {
+    "AdaptiveConfig": "repro.fleet.collector",
+    "AdaptiveScrapeController": "repro.fleet.collector",
+    "Alert": "repro.fleet.collector",
+    "AlertDeduper": "repro.fleet.collector",
+    "Collector": "repro.fleet.collector",
+    "CollectorConfig": "repro.fleet.collector",
+    "FleetCollector": "repro.fleet.collector",
+    "JobStream": "repro.fleet.collector",
+    "RoundReport": "repro.fleet.collector",
     "DivergenceReport": "repro.fleet.divergence",
     "JobPoint": "repro.fleet.divergence",
     "analyze": "repro.fleet.divergence",
@@ -30,6 +39,7 @@ _EXPORTS = {
     "simulate_job": "repro.fleet.jobs",
     "BucketStats": "repro.fleet.streaming",
     "StreamingRollup": "repro.fleet.streaming",
+    "WindowedRollup": "repro.fleet.streaming",
     "precision_label": "repro.fleet.streaming",
     "host_partition": "repro.fleet.distributed",
     "tree_reduce": "repro.fleet.distributed",

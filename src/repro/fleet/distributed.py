@@ -16,8 +16,9 @@ from repro.fleet.streaming import StreamingRollup
 
 
 def _empty_like(roll: StreamingRollup) -> StreamingRollup:
-    return StreamingRollup(roll.bucket_s, bins=roll.bins,
-                           lo=float(roll.edges[0]), hi=float(roll.edges[-1]))
+    # polymorphic: a WindowedRollup reduces to a WindowedRollup (same
+    # retention), so collector snapshots tree-reduce like batch rollups
+    return roll.spawn_empty()
 
 
 def host_partition(items: Sequence, n_hosts: int) -> list:
@@ -30,11 +31,13 @@ def host_partition(items: Sequence, n_hosts: int) -> list:
 def tree_reduce(rollups: Sequence, *, fanin: int = 2) -> StreamingRollup:
     """Reduce per-host rollups to one fleet rollup, `fanin` at a time.
 
-    Elements may be StreamingRollup objects or their `to_bytes()` blobs
-    (deserialized on arrival, as a reducer host would).  Inputs are never
-    mutated; the result is a fresh rollup.  Because merge is associative
-    and commutative, every (fanin, ordering) choice yields bucketwise-
-    identical fleet stats.
+    Elements may be StreamingRollup/WindowedRollup objects or their
+    `to_bytes()` blobs (deserialized on arrival, as a reducer host would —
+    the wire format is self-describing).  Inputs are never mutated; the
+    result is a fresh rollup.  Because merge is associative and
+    commutative — windowed merges align by absolute bucket index and
+    evict identically regardless of order — every (fanin, ordering)
+    choice yields bucketwise-identical fleet stats.
     """
     if fanin < 2:
         raise ValueError(f"fanin={fanin} must be >= 2")
@@ -47,8 +50,16 @@ def tree_reduce(rollups: Sequence, *, fanin: int = 2) -> StreamingRollup:
     while len(level) > 1:
         nxt = []
         for i in range(0, len(level), fanin):
-            acc = _empty_like(level[i])
-            for r in level[i:i + fanin]:
+            group = level[i:i + fanin]
+            # accumulate into a windowed rollup whenever the group has
+            # one: windowed absorbs plain (a window starting at bucket 0)
+            # but not vice versa, so the choice must not depend on which
+            # host happens to come first
+            seed = next((r for r in group
+                         if getattr(r, "retain", None) is not None),
+                        group[0])
+            acc = _empty_like(seed)
+            for r in group:
                 acc.merge(r)
             nxt.append(acc)
         level = nxt

@@ -8,6 +8,7 @@ with/without the flagged set — the paper's r = 0.53 -> 0.78 move.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
@@ -85,12 +86,19 @@ def analyze(jobs: list, *, flag_rel_err: float = 0.30) -> DivergenceReport:
     )
 
 
-def analyze_rollup(roll, *, flag_rel_err: float = 0.30) -> DivergenceReport:
+def analyze_rollup(roll, *, flag_rel_err: float = 0.30,
+                   empty_ok: bool = False) -> Optional[DivergenceReport]:
     """Triage straight off a StreamingRollup (simulated, replayed, or
     tree-reduced): uses the rollup's per-job OFU plus the app-reported MFU
-    registered at ingest (add_job, or add_grid(app_mfu=...) for traces)."""
+    registered at ingest (add_job, or add_grid(app_mfu=...) for traces).
+
+    empty_ok=True returns None instead of raising when no job carries MFU
+    metadata — the continuous-collector case, where triage runs every
+    round whether or not MFU-reporting jobs have appeared yet."""
     pts = roll.to_job_points()
     if not pts:
+        if empty_ok:
+            return None
         raise ValueError(
             "rollup has no jobs with app-MFU metadata; ingest via add_job "
             "or add_grid(app_mfu=...) before divergence triage")

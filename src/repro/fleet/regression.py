@@ -56,15 +56,20 @@ def detect_regressions(ofu: np.ndarray, *, window: int = 10,
     return out
 
 
-def scan_rollup(roll, **detector_kw) -> dict[str, list[Regression]]:
+def scan_rollup(roll, *, jobs=None, **detector_kw) -> dict[str, list[Regression]]:
     """Run the detector over every job series in a rollup (simulated,
-    replayed, or tree-reduced from many hosts — the detector never knows).
+    replayed, windowed, or tree-reduced from many hosts — the detector
+    never knows).
 
     Returns {job_id: regressions} for jobs with at least one detection —
     the sweep a fleet dashboard performs after each reduction round.
+    `jobs` restricts the sweep (a continuous collector scans only streams
+    that are still live).  Detection indices are relative to the rollup's
+    stored buckets; add `roll.bucket0` for absolute bucket indices when
+    scanning a windowed rollup.
     """
     out = {}
-    for jid in roll.jobs:
+    for jid in (roll.jobs if jobs is None else jobs):
         regs = detect_regressions(roll.job_ofu(jid), **detector_kw)
         if regs:
             out[jid] = regs

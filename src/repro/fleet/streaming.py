@@ -22,7 +22,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.ofu import hist_percentile_grid, ofu_series
+from repro.core.ofu import hist_percentile, hist_percentile_grid, ofu_series
 from repro.core.peaks import DEFAULT_CHIP, ChipSpec
 
 _FLEET = "__fleet__"
@@ -42,10 +42,13 @@ class BucketStats:
     mean: np.ndarray                     # NaN where a bucket saw no samples
     weight: np.ndarray
     percentiles: dict = field(default_factory=dict)   # q -> (B,) array
+    #: absolute start of bucket 0 — nonzero for windowed rollups, whose
+    #: retained rows begin at the retention horizon, not at t=0
+    t0_s: float = 0.0
 
     @property
     def centers_s(self) -> np.ndarray:
-        return (np.arange(len(self.mean)) + 0.5) * self.bucket_s
+        return self.t0_s + (np.arange(len(self.mean)) + 0.5) * self.bucket_s
 
 
 class StreamingRollup:
@@ -56,6 +59,10 @@ class StreamingRollup:
     fleet-wide histograms; readouts are percentile/mean time series.
     """
 
+    #: absolute index of the first stored bucket row; always 0 here — the
+    #: windowed subclass advances it as old buckets are evicted
+    bucket0 = 0
+
     def __init__(self, bucket_s: float = 300.0, *, bins: int = 128,
                  lo: float = 0.0, hi: float = 1.1):
         self.bucket_s = float(bucket_s)
@@ -65,6 +72,11 @@ class StreamingRollup:
         self._sums: dict = {}       # scope -> (B,) weighted value sums
         self._job_meta: dict = {}   # job_id -> dict (app_mfu, chips, ...)
         self.n_buckets = 0
+
+    def spawn_empty(self) -> "StreamingRollup":
+        """A fresh rollup with this one's bucketing (reduction identity)."""
+        return type(self)(self.bucket_s, bins=self.bins,
+                          lo=float(self.edges[0]), hi=float(self.edges[-1]))
 
     # -- ingest -------------------------------------------------------------
     def _scope_arrays(self, scope: str, b_needed: int):
@@ -80,36 +92,46 @@ class StreamingRollup:
             self._hists[scope], self._sums[scope] = nh, ns
         return self._hists[scope], self._sums[scope]
 
+    def _bucketize(self, t_s, ofu):
+        """(values, bucket indices, histogram bin indices) for raw samples.
+
+        Right-closed buckets: a scrape at t covers (t - interval, t], so a
+        boundary sample (t == k·bucket_s) belongs to bucket k-1, not k —
+        otherwise every run grows a spurious one-sample trailing bucket.
+        The ONE bucketing rule for plain and windowed rollups; it is what
+        makes their retained-span readouts bucketwise identical.
+        """
+        t_s = np.asarray(t_s, float).ravel()
+        v = np.asarray(ofu, float).ravel()
+        b = np.maximum(np.ceil(t_s / self.bucket_s).astype(int) - 1, 0)
+        k = np.clip(np.digitize(v, self.edges) - 1, 0, self.bins - 1)
+        return v, b, k
+
     def observe(self, job_id: str, t_s: np.ndarray, ofu: np.ndarray, *,
                 group: str = "unknown", weight: float = 1.0) -> None:
         """Fold OFU samples at times t_s into every scope this job hits."""
-        t_s = np.asarray(t_s, float).ravel()
-        v = np.asarray(ofu, float).ravel()
-        # right-closed buckets: a scrape at t covers (t - interval, t], so a
-        # boundary sample (t == k·bucket_s) belongs to bucket k-1, not k —
-        # otherwise every run grows a spurious one-sample trailing bucket
-        b = np.maximum(np.ceil(t_s / self.bucket_s).astype(int) - 1, 0)
-        k = np.clip(np.digitize(v, self.edges) - 1, 0, self.bins - 1)
+        v, b, k = self._bucketize(t_s, ofu)
         b_needed = int(b.max()) + 1 if len(b) else 0
         for scope in (("job", job_id), ("group", group), ("group", _FLEET)):
             h, s = self._scope_arrays(scope, b_needed)
             np.add.at(h, (b, k), weight)
             np.add.at(s, b, v * weight)
 
-    def add_job(self, tel, *, group: str | None = None) -> None:
+    def add_job(self, tel, *, group: str | None = None) -> np.ndarray:
         """Ingest a JobTelemetry: every sampled device's OFU series,
         chip-weighted so each job contributes its full fleet footprint.
         (A thin wrapper over the source-agnostic add_grid.)"""
         spec = tel.spec
-        self.add_grid(spec.job_id, tel.grid, chip=spec.chip,
-                      group=group or precision_label(spec.precisions),
-                      chips=spec.chips, app_mfu=tel.app_mfu, arch=spec.arch,
-                      flops_variant=spec.flops_variant)
+        return self.add_grid(
+            spec.job_id, tel.grid, chip=spec.chip,
+            group=group or precision_label(spec.precisions),
+            chips=spec.chips, app_mfu=tel.app_mfu, arch=spec.arch,
+            flops_variant=spec.flops_variant)
 
     def add_grid(self, job_id: str, grid, *, chip: ChipSpec = DEFAULT_CHIP,
                  group: str = "unknown", chips: int | None = None,
                  app_mfu: float | None = None, arch: str = "unknown",
-                 flops_variant: str = "exact") -> None:
+                 flops_variant: str = "exact") -> np.ndarray:
         """Ingest a DeviceGrid from ANY TelemetrySource — the
         source-agnostic twin of add_job, used when counters come from a
         replayed trace or a live poller instead of a simulated JobSpec.
@@ -117,7 +139,9 @@ class StreamingRollup:
         chips: the job's true device count for chip-weighting (defaults to
         the grid's sampled device count); app_mfu (with arch /
         flops_variant) registers the metadata `to_job_points` needs for
-        divergence triage.
+        divergence triage.  Returns the grid's OFU series so callers that
+        need the raw samples (the collector's adaptive controller) don't
+        recompute it.
         """
         chips = grid.n_devices if chips is None else chips
         if app_mfu is not None:
@@ -127,6 +151,7 @@ class StreamingRollup:
         ofu = ofu_series(grid.tpa, grid.clock_mhz, chip)
         self.observe(job_id, np.broadcast_to(grid.times_s, ofu.shape), ofu,
                      group=group, weight=chips / max(grid.n_devices, 1))
+        return ofu
 
     # -- distribution: merge + wire format ----------------------------------
     def merge(self, other: "StreamingRollup") -> "StreamingRollup":
@@ -141,6 +166,10 @@ class StreamingRollup:
                 or not np.array_equal(self.edges, other.edges)):
             raise ValueError("cannot merge rollups with different "
                              "bucketing (bucket_s/bins/edges must match)")
+        if getattr(other, "retain", None) is not None:
+            raise ValueError("cannot merge a WindowedRollup into a plain "
+                             "StreamingRollup (retention/eviction state "
+                             "would be lost); merge the other way around")
         n = max(self.n_buckets, other.n_buckets)
         for scope, oh in other._hists.items():
             h, s = self._scope_arrays(scope, n)
@@ -150,31 +179,51 @@ class StreamingRollup:
             self._job_meta.setdefault(jid, dict(m))
         return self
 
+    def _snapshot_extra(self, meta: dict, arrays: dict) -> None:
+        """Hook for subclasses to extend the wire format (no-op here)."""
+
     def to_bytes(self) -> bytes:
         """Self-contained snapshot (compressed npz): what a host ships to
-        the tree reducer instead of its raw scrapes."""
+        the tree reducer instead of its raw scrapes.  The format is
+        self-describing — `from_bytes` restores a plain or windowed rollup
+        according to what was serialized."""
         meta = {"bucket_s": self.bucket_s, "bins": self.bins,
                 "n_buckets": self.n_buckets,
                 "scopes": [list(k) for k in self._hists],
                 "job_meta": self._job_meta}
-        arrays = {"edges": self.edges,
-                  "meta": np.frombuffer(
-                      json.dumps(meta, default=lambda o: o.item()).encode(),
-                      dtype=np.uint8)}
+        arrays = {"edges": self.edges}
         for idx, scope in enumerate(self._hists):
             arrays[f"h{idx}"] = self._hists[scope]
             arrays[f"s{idx}"] = self._sums[scope]
+        self._snapshot_extra(meta, arrays)
+        arrays["meta"] = np.frombuffer(
+            json.dumps(meta, default=lambda o: o.item()).encode(),
+            dtype=np.uint8)
         buf = io.BytesIO()
         np.savez_compressed(buf, **arrays)
         return buf.getvalue()
 
     @classmethod
     def from_bytes(cls, blob: bytes) -> "StreamingRollup":
+        """Restore a snapshot; dispatches on the serialized kind, so a
+        reducer deserializes plain and windowed snapshots through the one
+        entry point `tree_reduce` uses."""
         with np.load(io.BytesIO(blob)) as z:
             meta = json.loads(bytes(z["meta"]).decode())
             edges = z["edges"]
-            roll = cls(meta["bucket_s"], bins=meta["bins"],
-                       lo=float(edges[0]), hi=float(edges[-1]))
+            lo, hi = float(edges[0]), float(edges[-1])
+            if meta.get("kind") == "windowed":
+                roll: StreamingRollup = WindowedRollup(
+                    meta["bucket_s"], retain=meta["retain"],
+                    bins=meta["bins"], lo=lo, hi=hi)
+                roll.bucket0 = int(meta["bucket0"])
+                for idx, key in enumerate(meta["escopes"]):
+                    scope = tuple(key)
+                    roll._ev_hist[scope] = z[f"e{idx}"].copy()
+                    roll._ev_sum[scope] = float(z["esums"][idx])
+            else:
+                roll = StreamingRollup(meta["bucket_s"], bins=meta["bins"],
+                                       lo=lo, hi=hi)
             roll.edges = edges.copy()
             roll.n_buckets = int(meta["n_buckets"])
             for idx, key in enumerate(meta["scopes"]):
@@ -186,10 +235,11 @@ class StreamingRollup:
 
     # -- readout ------------------------------------------------------------
     def _stats(self, scope, qs=(10, 50, 90)) -> BucketStats:
+        t0 = self.bucket0 * self.bucket_s
         h = self._hists.get(scope)
         if h is None:
             empty = np.empty(0)
-            return BucketStats(self.bucket_s, empty, empty)
+            return BucketStats(self.bucket_s, empty, empty, t0_s=t0)
         if h.shape[0] < self.n_buckets:            # pad lazily-grown scopes
             h, s = self._scope_arrays(scope, self.n_buckets)
         else:
@@ -200,7 +250,7 @@ class StreamingRollup:
         # all buckets × all percentiles in one cumulative-sum readout
         grid = hist_percentile_grid(self.edges, h, tuple(qs))
         pct = {q: grid[k] for k, q in enumerate(qs)}
-        return BucketStats(self.bucket_s, mean, w, pct)
+        return BucketStats(self.bucket_s, mean, w, pct, t0_s=t0)
 
     def job_stats(self, job_id: str, qs=(10, 50, 90)) -> BucketStats:
         return self._stats(("job", job_id), qs)
@@ -261,3 +311,180 @@ class StreamingRollup:
                 f"jobs={len(self.jobs)} groups={len(self.groups)} "
                 f"weighted_ofu={mean * 100:.1f}% "
                 f"last_bucket_p50={last * 100:.1f}%")
+
+
+class WindowedRollup(StreamingRollup):
+    """Ring-buffer rollup: full per-bucket detail for the LAST `retain`
+    buckets, plus all-time totals for everything already evicted.
+
+    A long-lived collector cannot let per-bucket state grow with uptime;
+    this bounds it.  Retained buckets carry the same histograms a plain
+    `StreamingRollup` would, so detector readouts over the retained span
+    (`job_ofu`, `*_stats`) are bucketwise IDENTICAL to a fresh rollup fed
+    the same samples — eviction only ever removes buckets older than the
+    horizon, folding their mass into per-scope all-time histograms
+    (`job_alltime` / `fleet_alltime` keep lifetime mean/percentiles
+    readable after the detail is gone).
+
+    The windowed state stays a monoid: retained rows align by ABSOLUTE
+    bucket index and add, eviction transfers are additive and depend only
+    on the union's newest bucket, so `merge()` remains associative and
+    commutative and `tree_reduce` works unchanged over windowed snapshots.
+    The one order-dependent edge: a sample already older than the horizon
+    AT INGEST TIME folds straight into the all-time totals (it has no row
+    to land in).
+
+    Readout indices are window-relative; `bucket0` is the absolute index
+    of row 0 (and `BucketStats.t0_s`/`centers_s` report absolute time), so
+    alert keys can be pinned to absolute buckets across evictions.
+    """
+
+    def __init__(self, bucket_s: float = 300.0, *, retain: int = 24,
+                 bins: int = 128, lo: float = 0.0, hi: float = 1.1):
+        if retain < 1:
+            raise ValueError(f"retain={retain} must be >= 1 bucket")
+        super().__init__(bucket_s, bins=bins, lo=lo, hi=hi)
+        self.retain = int(retain)
+        self.bucket0 = 0
+        self._ev_hist: dict = {}    # scope -> (bins,) evicted histogram
+        self._ev_sum: dict = {}     # scope -> evicted weighted value sum
+
+    def spawn_empty(self) -> "WindowedRollup":
+        return WindowedRollup(self.bucket_s, retain=self.retain,
+                              bins=self.bins, lo=float(self.edges[0]),
+                              hi=float(self.edges[-1]))
+
+    @property
+    def end_bucket(self) -> int:
+        """Absolute index one past the newest stored bucket."""
+        return self.bucket0 + self.n_buckets
+
+    # -- eviction -----------------------------------------------------------
+    def _ev_arrays(self, scope) -> np.ndarray:
+        h = self._ev_hist.get(scope)
+        if h is None:
+            h = self._ev_hist[scope] = np.zeros(self.bins)
+            self._ev_sum[scope] = 0.0
+        return h
+
+    def _evict(self, rows: int) -> None:
+        """Fold the oldest `rows` window rows into the all-time totals."""
+        for scope in list(self._hists):
+            h, s = self._hists[scope], self._sums[scope]
+            drop = min(rows, h.shape[0])
+            if drop and h[:drop].any():
+                self._ev_arrays(scope)
+                self._ev_hist[scope] += h[:drop].sum(axis=0)
+                self._ev_sum[scope] += float(s[:drop].sum())
+            self._hists[scope] = h[drop:].copy()
+            self._sums[scope] = s[drop:].copy()
+        self.bucket0 += rows
+        self.n_buckets = max(self.n_buckets - rows, 0)
+
+    def _advance_to(self, end_abs: int) -> None:
+        """Evict until the window can hold absolute bucket end_abs - 1."""
+        over = end_abs - (self.bucket0 + self.retain)
+        if over > 0:
+            self._evict(over)
+
+    # -- ingest ---------------------------------------------------------
+    def observe(self, job_id: str, t_s: np.ndarray, ofu: np.ndarray, *,
+                group: str = "unknown", weight: float = 1.0) -> None:
+        v, b_abs, k = self._bucketize(t_s, ofu)
+        if not v.size:
+            return
+        self._advance_to(int(b_abs.max()) + 1)
+        live = b_abs >= self.bucket0
+        rel = b_abs[live] - self.bucket0
+        b_needed = int(rel.max()) + 1 if rel.size else 0
+        for scope in (("job", job_id), ("group", group), ("group", _FLEET)):
+            h, s = self._scope_arrays(scope, b_needed)
+            if rel.size:
+                np.add.at(h, (rel, k[live]), weight)
+                np.add.at(s, rel, v[live] * weight)
+            if not live.all():       # already past the horizon at ingest
+                self._ev_arrays(scope)
+                np.add.at(self._ev_hist[scope], k[~live], weight)
+                self._ev_sum[scope] += float(v[~live].sum() * weight)
+
+    # -- distribution ---------------------------------------------------
+    def merge(self, other: StreamingRollup) -> "WindowedRollup":
+        """Fold another rollup in, aligning by ABSOLUTE bucket index.
+
+        `other` may be windowed (same retain) or plain (treated as a
+        window starting at bucket 0).  Rows older than the merged window's
+        horizon fold into the all-time totals — exactly what eviction
+        would have done had the data been ingested here.
+        """
+        if (self.bucket_s != other.bucket_s or self.bins != other.bins
+                or not np.array_equal(self.edges, other.edges)):
+            raise ValueError("cannot merge rollups with different "
+                             "bucketing (bucket_s/bins/edges must match)")
+        o_retain = getattr(other, "retain", None)
+        if o_retain is not None and o_retain != self.retain:
+            raise ValueError(f"cannot merge windowed rollups with "
+                             f"different retention ({self.retain} vs "
+                             f"{o_retain} buckets)")
+        ob0 = other.bucket0
+        self._advance_to(max(self.end_bucket, ob0 + other.n_buckets))
+        for scope, oh in other._hists.items():
+            osum = other._sums[scope]
+            cut = min(max(self.bucket0 - ob0, 0), oh.shape[0])
+            if cut and oh[:cut].any():
+                self._ev_arrays(scope)
+                self._ev_hist[scope] += oh[:cut].sum(axis=0)
+                self._ev_sum[scope] += float(osum[:cut].sum())
+            live = oh.shape[0] - cut
+            rel0 = ob0 + cut - self.bucket0
+            h, s = self._scope_arrays(scope, rel0 + live if live > 0 else 0)
+            if live > 0:
+                h[rel0:rel0 + live] += oh[cut:]
+                s[rel0:rel0 + live] += osum[cut:]
+        for scope, eh in getattr(other, "_ev_hist", {}).items():
+            self._ev_arrays(scope)
+            self._ev_hist[scope] += eh
+            self._ev_sum[scope] += other._ev_sum[scope]
+        for jid, m in other._job_meta.items():
+            self._job_meta.setdefault(jid, dict(m))
+        return self
+
+    def _snapshot_extra(self, meta: dict, arrays: dict) -> None:
+        meta["kind"] = "windowed"
+        meta["retain"] = self.retain
+        meta["bucket0"] = self.bucket0
+        meta["escopes"] = [list(k) for k in self._ev_hist]
+        for idx, scope in enumerate(self._ev_hist):
+            arrays[f"e{idx}"] = self._ev_hist[scope]
+        arrays["esums"] = np.array([self._ev_sum[k] for k in self._ev_hist])
+
+    # -- all-time readout (evicted + retained) ----------------------------
+    def _alltime(self, scope, qs=(10, 50, 90)) -> dict:
+        hist = np.zeros(self.bins)
+        total = 0.0
+        h = self._hists.get(scope)
+        if h is not None:
+            hist += h.sum(axis=0)
+            total += float(self._sums[scope].sum())
+        eh = self._ev_hist.get(scope)
+        if eh is not None:
+            hist += eh
+            total += self._ev_sum[scope]
+        w = float(hist.sum())
+        return {"mean": total / w if w > 0 else float("nan"),
+                "weight": w,
+                "percentiles": {q: hist_percentile(self.edges, hist, q)
+                                for q in qs}}
+
+    def job_alltime(self, job_id: str, qs=(10, 50, 90)) -> dict:
+        """Lifetime mean/weight/percentiles for a job — survives eviction."""
+        return self._alltime(("job", job_id), qs)
+
+    def fleet_alltime(self, qs=(10, 50, 90)) -> dict:
+        return self._alltime(("group", _FLEET), qs)
+
+    def summary(self) -> str:
+        at = self.fleet_alltime(qs=())
+        return (super().summary()
+                + f" window=[{self.bucket0},{self.end_bucket}) "
+                  f"retain={self.retain} "
+                  f"alltime_ofu={at['mean'] * 100:.1f}%")

@@ -17,6 +17,16 @@ Trace format (CSV with header, or JSONL — one record per line):
 
 `write_trace`/`read_trace` round-trip a `DeviceGrid` exactly (floats are
 serialized at full repr precision).
+
+Sources are also RESUMABLE: `poll(duration_s)` scrapes the next chunk of
+wall-time from a per-source cursor (grids come back with the right
+absolute `t0_s`), which is what the long-lived `fleet.collector.Collector`
+drives round after round — and `set_interval` retimes a live source under
+the shared §IV-C `check_scrape_interval` policy (the adaptive controller's
+actuator).  `scrapes()` remains the stateless one-shot batch view.
+
+See docs/ARCHITECTURE.md for the module-by-module pipeline walkthrough,
+including where a real DCGM/libtpu backend plugs in.
 """
 from __future__ import annotations
 
@@ -34,10 +44,85 @@ from repro.telemetry.scrape import DeviceGrid, scrape
 
 
 class TelemetrySource:
-    """Interface: scrapes() -> DeviceGrid (aligned counter series)."""
+    """Interface: scrapes() -> DeviceGrid (aligned counter series), plus a
+    stateful cursor for incremental collection.
+
+    `scrapes()` is the one-shot batch view.  `poll(duration_s)` scrapes
+    only the next `duration_s` seconds, advancing `cursor_s`; returned
+    grids carry absolute `t0_s`, so incremental rounds land in the same
+    rollup buckets batch ingestion would use.  `exhausted` reports when a
+    finite source (fixed-duration simulation, recorded trace) has nothing
+    left; `set_interval` retimes future polls where the cadence is ours to
+    choose (`retimable` is False for replay — the recorded cadence is
+    fixed).
+    """
+
+    #: whether set_interval may change this source's scrape cadence
+    retimable = True
 
     def scrapes(self) -> DeviceGrid:
         raise NotImplementedError
+
+    @property
+    def cursor_s(self) -> float:
+        """Absolute time up to which this source has been polled."""
+        return getattr(self, "_cursor_s", 0.0)
+
+    @property
+    def exhausted(self) -> bool:
+        """True when poll() can no longer produce a sample."""
+        return False
+
+    @property
+    def bounded(self) -> bool:
+        """True if poll() is guaranteed to exhaust eventually.
+
+        Guards `Collector.run(n_rounds=None)` against spinning forever:
+        the conservative default treats a source as unbounded unless it
+        carries a finite `duration_s` (a custom live poller without one
+        is exactly the case that never exhausts); replay overrides this —
+        a recorded trace always runs out.
+        """
+        return bool(np.isfinite(getattr(self, "duration_s", np.inf)))
+
+    def poll(self, duration_s: float) -> DeviceGrid:
+        """Scrape the next duration_s seconds; advance the cursor."""
+        raise NotImplementedError
+
+    def set_interval(self, interval_s: float) -> None:
+        """Retime future polls (§IV-C-checked) — the adaptive-controller
+        actuator."""
+        if not self.retimable:
+            raise ValueError(f"{type(self).__name__} cadence is fixed and "
+                             "cannot be retimed")
+        if interval_s <= 0:
+            raise ValueError(f"interval_s={interval_s} must be positive")
+        # honor the source's own §IV-C policy: a strict=False source that
+        # already runs degraded may be retimed within that same policy
+        check_scrape_interval(interval_s,
+                              strict=getattr(self, "strict", True))
+        self.interval_s = float(interval_s)
+
+    def _take(self, duration_s: float) -> int:
+        """Whole samples in the next duration_s at the current interval."""
+        iv = self.interval_s
+        if duration_s < iv:
+            raise ValueError(f"poll duration {duration_s}s is shorter than "
+                             f"the scrape interval {iv}s — no sample fits")
+        return int(duration_s / iv)
+
+    def _chunk_budget(self, duration_s: float) -> int:
+        """`_take` clamped to what remains before `duration_s` runs out —
+        the shared poll() front half; 0 means 'emit an empty grid'."""
+        n = self._take(duration_s)
+        total = getattr(self, "duration_s", np.inf)
+        if np.isfinite(total):
+            n = min(n, int((total - self.cursor_s) / self.interval_s + 1e-9))
+        return n
+
+    def _empty_grid(self) -> DeviceGrid:
+        return DeviceGrid(self.interval_s, np.empty((0, 0)),
+                          np.empty((0, 0)), t0_s=self.cursor_s)
 
 
 @dataclass
@@ -69,6 +154,43 @@ class SimulatorSource(TelemetrySource):
             stragglers=self.stragglers, n_devices=self.n_devices,
             seed=self.seed)
 
+    @property
+    def exhausted(self) -> bool:
+        return self.cursor_s + self.interval_s > self.duration_s + 1e-9
+
+    def poll(self, duration_s: float) -> DeviceGrid:
+        """Simulate only the next chunk of the run (cursor-relative).
+
+        Events keep their ABSOLUTE timeline (shifted into chunk-local
+        time), and the chunk seed derives deterministically from
+        (seed, poll count), so an incremental collection is reproducible
+        run-to-run.  Chunks draw independent jitter/clock streams, so a
+        chunked collection is statistically — not bit-for-bit — the
+        continuation of `scrapes()`.
+        """
+        if self.strict:
+            check_scrape_interval(self.interval_s)
+        c = self.cursor_s
+        n = self._chunk_budget(duration_s)
+        if n <= 0:
+            return self._empty_grid()
+        rounds = getattr(self, "_polls", 0)
+        from repro.fleet.engine import simulate_devices
+        shifted = [Event(e.start_s - c, e.end_s - c, slowdown=e.slowdown,
+                         mxu_scale=e.mxu_scale, kind=e.kind)
+                   for e in self.events]
+        chunk_seed = int(np.random.default_rng(
+            [self.seed, rounds]).integers(0, 2 ** 31))
+        grid = simulate_devices(
+            self.profile, duration_s=n * self.interval_s,
+            interval_s=self.interval_s, chip=self.chip, events=shifted,
+            stragglers=self.stragglers, n_devices=self.n_devices,
+            seed=chunk_seed)
+        grid.t0_s = c
+        self._cursor_s = c + n * self.interval_s
+        self._polls = rounds + 1
+        return grid
+
 
 @dataclass
 class BackendSource(TelemetrySource):
@@ -79,7 +201,7 @@ class BackendSource(TelemetrySource):
     """
 
     backends: Sequence[CounterBackend]
-    duration_s: float
+    duration_s: float            # may be float('inf') for poll-only use
     interval_s: float
     strict: bool = True
 
@@ -88,18 +210,74 @@ class BackendSource(TelemetrySource):
             [scrape(be, self.duration_s, self.interval_s, strict=self.strict)
              for be in self.backends])
 
+    @property
+    def exhausted(self) -> bool:
+        return self.cursor_s + self.interval_s > self.duration_s + 1e-9
+
+    def poll(self, duration_s: float) -> DeviceGrid:
+        """Poll every backend for the next chunk; backends keep their own
+        clock state (a live DCGM/libtpu poller is naturally resumable)."""
+        check_scrape_interval(self.interval_s, strict=self.strict)
+        c = self.cursor_s
+        n = self._chunk_budget(duration_s)
+        if n <= 0:
+            return self._empty_grid()
+        tpa = np.empty((len(self.backends), n))
+        clk = np.empty((len(self.backends), n))
+        for d, be in enumerate(self.backends):
+            for i in range(n):
+                tpa[d, i], clk[d, i] = be.poll(self.interval_s)
+        self._cursor_s = c + n * self.interval_s
+        return DeviceGrid(self.interval_s, tpa, clk, t0_s=c)
+
 
 @dataclass
 class TraceReplaySource(TelemetrySource):
-    """Replays recorded (t_s, device, tpa, clock_mhz) scrapes from disk."""
+    """Replays recorded (t_s, device, tpa, clock_mhz) scrapes from disk.
+
+    Not retimable: the cadence is whatever the recorder used.  `poll`
+    slices the cached trace by the recorded timestamps, so a collector
+    replays an archive round-for-round exactly as it would watch a live
+    fleet (polls before the trace's first sample return empty grids).
+    """
 
     path: str
     fmt: str = "auto"            # 'csv' | 'jsonl' | 'auto' (by suffix)
     interval_s: Optional[float] = None   # required for 1-sample traces
 
+    retimable = False
+
+    bounded = True               # a recorded trace always runs out
+
     def scrapes(self) -> DeviceGrid:
         return read_trace(self.path, fmt=self.fmt,
                           interval_s=self.interval_s)
+
+    def _cached(self) -> DeviceGrid:
+        grid = getattr(self, "_grid", None)
+        if grid is None:
+            grid = self._grid = self.scrapes()
+        return grid
+
+    @property
+    def exhausted(self) -> bool:
+        grid = self._cached()
+        times = grid.times_s
+        return not len(times) or self.cursor_s >= times[-1] - 1e-9
+
+    def poll(self, duration_s: float) -> DeviceGrid:
+        grid = self._cached()
+        if duration_s <= 0:
+            raise ValueError(f"poll duration {duration_s}s must be positive")
+        c = self.cursor_s
+        times = grid.times_s
+        i0, i1 = np.searchsorted(times, [c + 1e-9, c + duration_s + 1e-9])
+        sub = DeviceGrid(grid.interval_s, grid.tpa[:, i0:i1],
+                         grid.clock_mhz[:, i0:i1],
+                         t0_s=float(times[i0]) - grid.interval_s
+                         if i1 > i0 else c)
+        self._cursor_s = c + duration_s   # wall clock advances regardless
+        return sub
 
 
 _FIELDS = ("t_s", "device", "tpa", "clock_mhz")

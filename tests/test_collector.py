@@ -1,0 +1,418 @@
+"""Collector daemon + windowed rollup coverage (ISSUE 3 acceptance):
+windowed eviction is detector-transparent over the retained span, windowed
+merge stays associative/commutative (and tree-reduces), the adaptive
+controller tightens on variance spikes without ever violating §IV-C, and
+a Collector's incremental ingestion matches one-shot batch ingestion.
+"""
+import numpy as np
+import pytest
+
+from repro.fleet.collector import (AdaptiveConfig, AdaptiveScrapeController,
+                                   AlertDeduper, Collector, CollectorConfig,
+                                   FleetCollector, JobStream)
+from repro.fleet.distributed import tree_reduce
+from repro.fleet.regression import detect_regressions
+from repro.fleet.streaming import StreamingRollup, WindowedRollup
+from repro.telemetry import Event, StepProfile
+from repro.telemetry.counters import MAX_HW_AVG_WINDOW_S
+from repro.telemetry.source import SimulatorSource
+
+PROFILE = StepProfile(mxu_time_s=0.84, step_time_s=2.0)
+
+
+def _dense_series(seed, n_buckets=30, bucket_s=60.0, per_bucket=8):
+    """(t, v) samples hitting every bucket (regression-shaped: collapse)."""
+    rng = np.random.default_rng(seed)
+    t = np.concatenate([(b + rng.uniform(0.05, 0.95, per_bucket)) * bucket_s
+                        for b in range(n_buckets)])
+    level = np.where(np.arange(n_buckets) < n_buckets // 2, 0.42, 0.17)
+    v = np.concatenate([level[b] + rng.normal(0, 0.01, per_bucket)
+                        for b in range(n_buckets)])
+    return t, np.clip(v, 0, 1.05)
+
+
+# ---------------------------------------------------------------------------
+# WindowedRollup: eviction transparency, merge laws, wire format
+# ---------------------------------------------------------------------------
+def test_windowed_matches_fresh_rollup_over_retained_span():
+    win = WindowedRollup(bucket_s=60, retain=8)
+    fresh = StreamingRollup(bucket_s=60)
+    for seed, jid in ((1, "a"), (2, "b")):
+        t, v = _dense_series(seed)
+        win.observe(jid, t, v, group="bf16", weight=3.0)
+        fresh.observe(jid, t, v, group="bf16", weight=3.0)
+    b0 = win.bucket0
+    assert b0 == 30 - 8 and win.n_buckets == 8
+    for jid in ("a", "b"):
+        sw, sf = win.job_stats(jid), fresh.job_stats(jid)
+        np.testing.assert_array_equal(sw.mean, sf.mean[b0:])
+        np.testing.assert_array_equal(sw.weight, sf.weight[b0:])
+        for q in (10, 50, 90):
+            np.testing.assert_array_equal(sw.percentiles[q],
+                                          sf.percentiles[q][b0:])
+        np.testing.assert_allclose(sw.centers_s, sf.centers_s[b0:])
+        # detector output over the retained span is identical
+        regs_w = detect_regressions(win.job_ofu(jid), window=3,
+                                    min_duration=1)
+        regs_f = detect_regressions(fresh.job_ofu(jid)[b0:], window=3,
+                                    min_duration=1)
+        assert [(r.start_idx, r.end_idx, r.factor) for r in regs_w] \
+            == [(r.start_idx, r.end_idx, r.factor) for r in regs_f]
+
+
+def test_windowed_alltime_conserves_evicted_mass():
+    win = WindowedRollup(bucket_s=60, retain=5)
+    fresh = StreamingRollup(bucket_s=60)
+    t, v = _dense_series(3)
+    win.observe("j", t, v, weight=2.0)
+    fresh.observe("j", t, v, weight=2.0)
+    at = win.fleet_alltime(qs=(50,))
+    f = fresh.fleet_stats(qs=())
+    w_total = float(np.nansum(f.weight))
+    assert np.isclose(at["weight"], w_total)
+    assert np.isclose(at["mean"],
+                      float(np.nansum(f.mean * f.weight)) / w_total)
+    assert np.isfinite(at["percentiles"][50])
+    # job-level lifetime view survives full eviction of early buckets
+    assert np.isclose(win.job_alltime("j")["weight"], w_total)
+
+
+def _windowed(seed, retain=6):
+    rng = np.random.default_rng(seed)
+    roll = WindowedRollup(bucket_s=60, retain=retain)
+    for _ in range(12):
+        t = rng.uniform(1, rng.uniform(300, 1800), size=10)
+        v = rng.uniform(0, 1.05, size=10)
+        roll.observe(f"job{rng.integers(3)}", t, v,
+                     group=("bf16", "fp8")[int(rng.integers(2))],
+                     weight=float(rng.integers(1, 8)))
+    return roll
+
+
+def _assert_same_windowed(a: WindowedRollup, b: WindowedRollup):
+    assert (a.bucket0, a.n_buckets, a.retain) \
+        == (b.bucket0, b.n_buckets, b.retain)
+    assert set(a._hists) == set(b._hists)
+    for scope in a._hists:
+        pad_a = np.pad(a._hists[scope],
+                       ((0, a.n_buckets - a._hists[scope].shape[0]), (0, 0)))
+        pad_b = np.pad(b._hists[scope],
+                       ((0, b.n_buckets - b._hists[scope].shape[0]), (0, 0)))
+        np.testing.assert_allclose(pad_a, pad_b, atol=1e-12)
+    assert set(a._ev_hist) == set(b._ev_hist)
+    for scope in a._ev_hist:
+        np.testing.assert_allclose(a._ev_hist[scope], b._ev_hist[scope],
+                                   atol=1e-12)
+        assert np.isclose(a._ev_sum[scope], b._ev_sum[scope])
+
+
+def test_windowed_merge_commutative_associative():
+    def m(*seeds):
+        out = WindowedRollup(bucket_s=60, retain=6)
+        for s in seeds:
+            out.merge(_windowed(s))
+        return out
+
+    _assert_same_windowed(m(1, 2), m(2, 1))
+    left = m(1, 2).merge(_windowed(3))
+    right = m(1).merge(m(2, 3))
+    _assert_same_windowed(left, right)
+    # tree_reduce over snapshots agrees too, any fanin
+    red2 = tree_reduce([_windowed(s).to_bytes() for s in (1, 2, 3)], fanin=2)
+    red3 = tree_reduce([_windowed(s) for s in (1, 2, 3)], fanin=3)
+    assert isinstance(red2, WindowedRollup)
+    _assert_same_windowed(left, red2)
+    _assert_same_windowed(red2, red3)
+
+
+def test_tree_reduce_mixed_plain_windowed_is_order_independent():
+    plain = StreamingRollup(bucket_s=60)
+    win = WindowedRollup(bucket_s=60, retain=5)
+    rng = np.random.default_rng(0)
+    t, v = rng.uniform(1, 900, 50), rng.uniform(0, 1.05, 50)
+    plain.observe("a", t, v)
+    win.observe("b", t, v)
+    r1 = tree_reduce([plain.to_bytes(), win.to_bytes()])
+    r2 = tree_reduce([win.to_bytes(), plain.to_bytes()])
+    # the windowed element wins the accumulator regardless of host order
+    assert isinstance(r1, WindowedRollup) and isinstance(r2, WindowedRollup)
+    _assert_same_windowed(r1, r2)
+
+
+def test_windowed_merge_guards():
+    with pytest.raises(ValueError, match="retention"):
+        WindowedRollup(bucket_s=60, retain=6).merge(
+            WindowedRollup(bucket_s=60, retain=8))
+    with pytest.raises(ValueError, match="WindowedRollup into a plain"):
+        StreamingRollup(bucket_s=60).merge(WindowedRollup(bucket_s=60))
+    # plain INTO windowed is fine: treated as a window starting at bucket 0
+    plain = StreamingRollup(bucket_s=60)
+    t, v = _dense_series(4)
+    plain.observe("j", t, v)
+    win = WindowedRollup(bucket_s=60, retain=5).merge(plain)
+    assert win.bucket0 == plain.n_buckets - 5
+    np.testing.assert_array_equal(win.job_stats("j").mean,
+                                  plain.job_stats("j").mean[win.bucket0:])
+
+
+def test_windowed_serialization_roundtrip():
+    roll = _windowed(9)
+    back = StreamingRollup.from_bytes(roll.to_bytes())   # self-describing
+    assert isinstance(back, WindowedRollup)
+    _assert_same_windowed(roll, back)
+    assert back._job_meta == roll._job_meta
+    a, b = roll.fleet_alltime(), back.fleet_alltime()
+    assert np.isclose(a["mean"], b["mean"]) and a["weight"] == b["weight"]
+
+
+# ---------------------------------------------------------------------------
+# Adaptive scrape scheduling
+# ---------------------------------------------------------------------------
+def test_adaptive_tightens_on_spike_and_relaxes_when_quiet():
+    cfg = AdaptiveConfig(min_interval_s=5.0, max_interval_s=30.0,
+                         quiet_rounds=2)
+    ctl = AdaptiveScrapeController(cfg)
+    rng = np.random.default_rng(0)
+    quiet = lambda: 0.4 + rng.normal(0, 0.005, 64)         # noqa: E731
+    spiky = lambda: rng.choice([0.4, 0.15], 64)            # noqa: E731
+    iv = 30.0
+    iv = ctl.update("j", quiet(), iv)                      # builds baseline
+    assert iv == 30.0
+    iv = ctl.update("j", spiky(), iv)                      # variance spike
+    assert iv == 15.0
+    iv = ctl.update("j", spiky(), iv)                      # still spiking
+    assert iv == 7.5
+    history = [iv]
+    for _ in range(6):                                     # quiet again
+        iv = ctl.update("j", quiet(), iv)
+        history.append(iv)
+    assert history[-1] == 30.0                             # relaxed back
+    assert all(cfg.min_interval_s <= h <= cfg.max_interval_s
+               for h in history)
+
+
+def test_adaptive_respects_interval_policy_bounds():
+    ctl = AdaptiveScrapeController(AdaptiveConfig(min_interval_s=10.0,
+                                                  max_interval_s=20.0,
+                                                  quiet_rounds=1))
+    rng = np.random.default_rng(1)
+    iv = 20.0
+    for k in range(20):   # alternate spiky/quiet; never leaves the bounds
+        samples = rng.choice([0.4, 0.1], 64) if k % 2 \
+            else 0.4 + rng.normal(0, 0.003, 64)
+        iv = ctl.update("j", samples, iv)
+        assert 10.0 <= iv <= 20.0 <= MAX_HW_AVG_WINDOW_S
+    with pytest.raises(ValueError, match="averaging window"):
+        AdaptiveConfig(max_interval_s=45.0)    # §IV-C ceiling is enforced
+
+
+def test_collector_adaptive_retimes_source_on_event_boundary():
+    streams = [JobStream("reg", SimulatorSource(
+        PROFILE, duration_s=4800, interval_s=30, n_devices=4, seed=2,
+        events=[Event(2550, 4800, slowdown=2.5)]))]
+    cfg = CollectorConfig(round_s=300, bucket_s=300, retain=8,
+                          adaptive=AdaptiveConfig(min_interval_s=5.0))
+    col = Collector(streams, cfg)
+    reports = col.run()
+    ivs = [r.intervals["reg"] for r in reports]
+    assert min(ivs) < 30.0          # tightened on the dispersion spike
+    assert ivs[-1] == 30.0          # relaxed once the new level is quiet
+    assert all(5.0 <= i <= MAX_HW_AVG_WINDOW_S for i in ivs)
+
+
+# ---------------------------------------------------------------------------
+# Collector: batch equivalence, alerts, fleet reduction
+# ---------------------------------------------------------------------------
+class _RecordingSource(SimulatorSource):
+    """Captures every polled grid so the test can batch-ingest the same."""
+
+    def poll(self, duration_s):
+        grid = super().poll(duration_s)
+        self.__dict__.setdefault("polled", []).append(grid)
+        return grid
+
+
+def test_collector_incremental_matches_batch_ingestion():
+    src = _RecordingSource(PROFILE, duration_s=3600, interval_s=30,
+                           n_devices=3, seed=5,
+                           events=[Event(1800, 3600, slowdown=2.5)])
+    cfg = CollectorConfig(round_s=300, bucket_s=300, retain=12)
+    col = Collector([JobStream("j", src, chips=96, group="bf16",
+                               app_mfu=0.35)], cfg)
+    col.run()
+    batch = WindowedRollup(bucket_s=300, retain=12)
+    for grid in src.polled:
+        batch.add_grid("j", grid, group="bf16", chips=96, app_mfu=0.35)
+    assert col.rollup.bucket0 == batch.bucket0
+    np.testing.assert_array_equal(col.rollup.job_ofu("j"),
+                                  batch.job_ofu("j"))
+    np.testing.assert_array_equal(col.rollup.fleet_stats().mean,
+                                  batch.fleet_stats().mean)
+    regs_c = detect_regressions(col.rollup.job_ofu("j"), window=4,
+                                min_duration=2)
+    regs_b = detect_regressions(batch.job_ofu("j"), window=4, min_duration=2)
+    assert [(r.start_idx, r.factor) for r in regs_c] \
+        == [(r.start_idx, r.factor) for r in regs_b]
+
+
+def test_collector_alert_fires_once_per_episode():
+    streams = [JobStream("reg", SimulatorSource(
+        PROFILE, duration_s=7200, interval_s=30, n_devices=4, seed=2,
+        events=[Event(3600, 7200, slowdown=2.5)]), chips=128)]
+    col = Collector(streams, CollectorConfig(round_s=300, retain=24))
+    col.run()
+    regression_alerts = [a for a in col.alerts if a.kind == "regression"]
+    assert len(regression_alerts) == 1         # dedup across ~12 hot rounds
+    assert regression_alerts[0].factor > 1.8
+    assert "reg" == regression_alerts[0].job_id
+
+
+def test_collector_divergence_alert_and_dedup():
+    # app reports 40% MFU but true duty is ~17%: miscalc signature
+    src = SimulatorSource(StepProfile(mxu_time_s=0.34, step_time_s=2.0),
+                          duration_s=1800, interval_s=30, n_devices=4, seed=3)
+    col = Collector([JobStream("liar", src, chips=64, app_mfu=0.40)],
+                    CollectorConfig(round_s=300))
+    col.run()
+    div = [a for a in col.alerts if a.kind == "divergence"]
+    assert len(div) == 1 and div[0].job_id == "liar"
+
+
+def test_alert_deduper_rearms_after_clear_rounds():
+    key = ("j", "regression")
+    d = AlertDeduper(clear_rounds=2)
+    assert d.offer(key) is True                 # round 1: fires
+    d.tick()
+    assert d.offer(key) is False                # round 2: still active
+    d.tick()
+    d.tick()                                    # round 3: quiet #1
+    assert key in d._active                     # not yet re-armed
+    d.tick()                                    # round 4: quiet #2 -> retired
+    assert d.offer(key) is True                 # round 5: fresh episode
+
+
+def test_alert_deduper_tracks_drift_but_fires_distinct_episodes():
+    d = AlertDeduper(clear_rounds=2, anchor_tolerance=4)
+    assert d.offer(("j", "regression"), anchor=10) is True
+    d.tick()
+    # window eviction drifts the detected start a little: same episode
+    assert d.offer(("j", "regression"), anchor=12) is False
+    # a second, distant collapse fires while the first is still active
+    assert d.offer(("j", "regression"), anchor=30) is True
+    d.tick()
+    assert d.offer(("j", "regression"), anchor=13) is False
+    assert d.offer(("j", "regression"), anchor=29) is False
+
+
+def test_collector_pages_second_distinct_collapse():
+    # two separate dips: recover in between, collapse again much later —
+    # the second episode must page even though the first is still in the
+    # retained window (and is re-detected by every round's scan)
+    streams = [JobStream("twice", SimulatorSource(
+        PROFILE, duration_s=9600, interval_s=30, n_devices=4, seed=4,
+        events=[Event(1200, 2100, slowdown=2.5),
+                Event(5400, 9600, slowdown=3.0)]), chips=64)]
+    col = Collector(streams, CollectorConfig(round_s=300, retain=32))
+    col.run()
+    regs = [a for a in col.alerts if a.kind == "regression"]
+    assert len(regs) == 2
+    assert regs[0].round_idx < regs[1].round_idx
+
+
+def test_adaptive_rebaselines_after_sustained_regime_change():
+    ctl = AdaptiveScrapeController(AdaptiveConfig(min_interval_s=5.0,
+                                                  quiet_rounds=2))
+    rng = np.random.default_rng(2)
+    iv = ctl.update("j", 0.4 + rng.normal(0, 0.005, 64), 30.0)
+    # dispersion steps PERMANENTLY ~10x: must tighten, then re-baseline
+    # and relax instead of pinning the interval at min forever
+    ivs = []
+    for _ in range(40):
+        iv = ctl.update("j", rng.choice([0.45, 0.25], 64), iv)
+        ivs.append(iv)
+    assert min(ivs) == 5.0          # reacted hard to the shift
+    assert ivs[-1] == 30.0          # absorbed the new regime, relaxed back
+
+
+def test_adaptive_tighten_clamps_degraded_interval_into_policy():
+    # a degraded source at 120 s spikes: one half-step lands at 60 s,
+    # still past the §IV-C ceiling — the tighten must clamp, not crash
+    ctl = AdaptiveScrapeController(AdaptiveConfig())
+    rng = np.random.default_rng(3)
+    ctl.update("j", 0.4 + rng.normal(0, 0.003, 64), 120.0)   # baseline
+    new = ctl.update("j", rng.choice([0.45, 0.1], 64), 120.0)
+    assert new == MAX_HW_AVG_WINDOW_S
+
+
+def test_adaptive_collector_tolerates_degraded_source_interval():
+    # a strict=False source legitimately sits beyond the 30 s averaging
+    # window; the controller must not crash it while leaving it untouched
+    src = SimulatorSource(PROFILE, duration_s=1800, interval_s=45.0,
+                          n_devices=2, seed=0, strict=False)
+    col = Collector([JobStream("degraded", src)],
+                    CollectorConfig(round_s=300, adaptive=AdaptiveConfig()))
+    with pytest.warns(RuntimeWarning, match="averaging window"):
+        reports = col.run()
+    assert all(r.intervals["degraded"] == 45.0 for r in reports)
+
+
+def test_fleet_collector_rejects_unbounded_run():
+    from repro.telemetry.counters import SimulatedDeviceBackend
+    from repro.telemetry.source import BackendSource
+    live = BackendSource([SimulatedDeviceBackend(PROFILE)],
+                         duration_s=float("inf"), interval_s=30.0)
+    fc = FleetCollector([Collector([JobStream("live", live)],
+                                   CollectorConfig(round_s=300))])
+    with pytest.raises(ValueError, match="unbounded"):
+        fc.run()
+    assert len(fc.run(n_rounds=2)) == 2
+
+
+def test_run_requires_n_rounds_for_custom_unbounded_source():
+    class LivePoller(SimulatorSource):      # no finite duration_s
+        pass
+
+    src = LivePoller(PROFILE, duration_s=float("inf"), interval_s=30.0)
+    assert not src.bounded
+    with pytest.raises(ValueError, match="unbounded.*live"):
+        Collector([JobStream("live", src)]).run()
+    # bounded run still works with an explicit budget
+    reps = Collector([JobStream("live", src)],
+                     CollectorConfig(round_s=300)).run(n_rounds=2)
+    assert len(reps) == 2
+
+
+def test_fleet_collector_reduces_to_single_process_state():
+    def host(jid, seed):
+        src = SimulatorSource(PROFILE, duration_s=1800, interval_s=30,
+                              n_devices=2, seed=seed)
+        return Collector([JobStream(jid, src, chips=32)],
+                         CollectorConfig(round_s=300, retain=6))
+
+    fc = FleetCollector([host("a", 1), host("b", 2)], reduce_every=1)
+    fc.run()
+    assert fc.fleet is not None and set(fc.fleet.jobs) == {"a", "b"}
+    # reduced fleet state == merging the hosts' rollups directly
+    direct = fc.collectors[0].rollup.spawn_empty()
+    for c in fc.collectors:
+        direct.merge(c.rollup)
+    np.testing.assert_allclose(fc.fleet.fleet_stats().mean,
+                               direct.fleet_stats().mean, equal_nan=True)
+    assert fc.scan() == {}                         # nothing regressed
+
+
+def test_collector_config_guards():
+    with pytest.raises(ValueError, match="round_s"):
+        CollectorConfig(round_s=0)
+    with pytest.raises(ValueError, match="at.*least one scrape"):
+        CollectorConfig(round_s=20.0,
+                        adaptive=AdaptiveConfig(max_interval_s=30.0))
+    with pytest.raises(ValueError, match="duplicate"):
+        src = SimulatorSource(PROFILE, duration_s=60, interval_s=30)
+        Collector([JobStream("x", src), JobStream("x", src)])
+    with pytest.raises(ValueError, match="n_rounds"):
+        from repro.telemetry.counters import SimulatedDeviceBackend
+        from repro.telemetry.source import BackendSource
+        be = BackendSource([SimulatedDeviceBackend(PROFILE)],
+                           duration_s=float("inf"), interval_s=30)
+        Collector([JobStream("live", be)]).run()

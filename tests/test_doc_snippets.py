@@ -1,0 +1,29 @@
+"""README / ARCHITECTURE code fences must run against the current tree.
+
+Intentionally the same check CI's standalone docs job performs via
+tools/check_doc_snippets.py: the CI job gives doc health its own named
+status check, while this wrapper puts it in tier-1 so LOCAL runs (the
+gate most development actually goes through) catch doc rot too.  Keep
+the file list here and in .github/workflows/ci.yml in sync."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_doc_snippets_execute_cleanly():
+    docs = [ROOT / "README.md", ROOT / "docs" / "ARCHITECTURE.md"]
+    for d in docs:
+        assert d.exists(), f"missing doc {d}"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_doc_snippets.py"),
+         *map(str, docs)],
+        capture_output=True, text=True, env=env)
+    assert res.returncode == 0, f"doc snippets failed:\n{res.stdout}\n{res.stderr}"
+    # both files must actually contribute runnable snippets
+    for d in docs:
+        assert f"{d}: 0 snippet(s) ran" not in res.stdout

@@ -210,3 +210,92 @@ print("REPLAY_OK", round(regs["traced"][0].factor, 2))
                          capture_output=True, text=True)
     assert res.returncode == 0, res.stderr
     assert "REPLAY_OK" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Stateful scrape cursors (PR 3: incremental collection)
+# ---------------------------------------------------------------------------
+def test_simulator_poll_cursor_covers_run_without_gaps():
+    src = SimulatorSource(PROF, duration_s=600, interval_s=30.0,
+                          n_devices=3, seed=7,
+                          events=[Event(300, 600, slowdown=2.5)])
+    grids = []
+    while not src.exhausted:
+        grids.append(src.poll(150))
+    assert src.cursor_s == 600
+    times = np.concatenate([g.times_s for g in grids])
+    np.testing.assert_allclose(times, np.arange(1, 21) * 30.0)
+    # events stay on the ABSOLUTE timeline across chunk boundaries
+    tpa = np.concatenate([g.tpa for g in grids], axis=1)
+    assert tpa[:, 10:].mean() < tpa[:, :10].mean() / 2
+    # polls are deterministic given (seed, poll count)
+    src2 = SimulatorSource(PROF, duration_s=600, interval_s=30.0,
+                           n_devices=3, seed=7,
+                           events=[Event(300, 600, slowdown=2.5)])
+    np.testing.assert_array_equal(src2.poll(150).tpa, grids[0].tpa)
+
+
+def test_poll_shorter_than_interval_rejected():
+    src = SimulatorSource(PROF, duration_s=600, interval_s=30.0)
+    with pytest.raises(ValueError, match="shorter than"):
+        src.poll(10)
+
+
+def test_set_interval_enforces_scrape_policy():
+    src = SimulatorSource(PROF, duration_s=600, interval_s=30.0, seed=1)
+    src.poll(60)
+    src.set_interval(10.0)
+    grid = src.poll(60)
+    assert grid.interval_s == 10.0 and grid.tpa.shape[1] == 6
+    assert np.isclose(grid.t0_s, 60.0)      # cursor carried across retiming
+    with pytest.raises(ValueError, match="averaging window"):
+        src.set_interval(45.0)              # §IV-C
+    with pytest.raises(ValueError, match="positive"):
+        src.set_interval(0.0)
+
+
+def test_backend_source_poll_is_resumable():
+    def series(chunks):
+        bes = [SimulatedDeviceBackend(PROF, seed=s) for s in (0, 1)]
+        src = BackendSource(bes, duration_s=180, interval_s=30.0)
+        grids = [src.poll(c) for c in chunks]
+        assert src.exhausted
+        return np.concatenate([g.tpa for g in grids], axis=1)
+
+    # backends advance their own clock: chunking must not change the data
+    np.testing.assert_array_equal(series([180]), series([60, 60, 60]))
+    # duration_s=inf makes a poll-only live source that never exhausts
+    live = BackendSource([SimulatedDeviceBackend(PROF)],
+                         duration_s=float("inf"), interval_s=30.0)
+    assert live.poll(60).tpa.shape == (1, 2) and not live.exhausted
+
+
+def test_trace_replay_poll_slices_recorded_times(tmp_path):
+    grid = simulate_devices(PROF, duration_s=300, interval_s=30.0,
+                            n_devices=2, seed=5)
+    path = tmp_path / "t.csv"
+    write_trace(grid, str(path))
+    src = TraceReplaySource(str(path))
+    assert not src.retimable
+    with pytest.raises(ValueError, match="fixed"):
+        src.set_interval(10.0)
+    chunks = []
+    while not src.exhausted:
+        chunks.append(src.poll(120))
+    got = np.concatenate([c.tpa for c in chunks if c.tpa.size], axis=1)
+    np.testing.assert_array_equal(got, grid.tpa)
+    times = np.concatenate([c.times_s for c in chunks if c.tpa.size])
+    np.testing.assert_allclose(times, grid.times_s)
+
+
+def test_set_interval_honors_source_strictness():
+    # a strict=False source already runs degraded past the averaging
+    # window; retiming within that same policy must not be rejected
+    src = SimulatorSource(PROF, duration_s=600, interval_s=45.0,
+                          n_devices=1, strict=False)
+    with pytest.warns(RuntimeWarning, match="averaging window"):
+        src.set_interval(40.0)
+    assert src.interval_s == 40.0
+    strict_src = SimulatorSource(PROF, duration_s=600, interval_s=30.0)
+    with pytest.raises(ValueError, match="averaging window"):
+        strict_src.set_interval(40.0)

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Execute the ```python code fences in markdown docs.
+
+Keeps README.md / docs/ARCHITECTURE.md honest: every python snippet must
+import and run cleanly against the current tree (CI runs this as the docs
+job; tests/test_doc_snippets.py runs it in tier-1).
+
+    PYTHONPATH=src python tools/check_doc_snippets.py README.md docs/*.md
+
+Fences annotated ```python no-run (hardware-only wiring, illustrative
+fragments) are skipped but still counted.  Each snippet runs in its own
+namespace, in a temporary working directory so file-writing examples
+leave no droppings.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+import tempfile
+import traceback
+
+FENCE = re.compile(r"^```python([^\n`]*)\n(.*?)^```\s*$",
+                   re.MULTILINE | re.DOTALL)
+
+
+def iter_snippets(text: str):
+    """(info_string, code, line_number) for every python fence."""
+    for m in FENCE.finditer(text):
+        line = text.count("\n", 0, m.start()) + 1
+        yield m.group(1).strip(), m.group(2), line
+
+
+def check_file(path: str) -> tuple[int, int, list]:
+    """(ran, skipped, failures) for one markdown file."""
+    with open(path) as fh:
+        text = fh.read()
+    ran = skipped = 0
+    failures = []
+    for info, code, line in iter_snippets(text):
+        if "no-run" in info:
+            skipped += 1
+            continue
+        ns = {"__name__": "__doc_snippet__"}
+        try:
+            exec(compile(code, f"{path}:{line}", "exec"), ns)   # noqa: S102
+            ran += 1
+        except Exception:
+            failures.append((path, line, traceback.format_exc()))
+    return ran, skipped, failures
+
+
+def main(paths) -> int:
+    if not paths:
+        print("usage: check_doc_snippets.py FILE.md [FILE.md ...]")
+        return 2
+    total_ran = total_skipped = 0
+    failures = []
+    start = os.getcwd()
+    for path in paths:
+        abspath = os.path.abspath(path)
+        with tempfile.TemporaryDirectory() as tmp:
+            os.chdir(tmp)
+            try:
+                ran, skipped, fails = check_file(abspath)
+            finally:
+                os.chdir(start)
+        total_ran += ran
+        total_skipped += skipped
+        failures.extend(fails)
+        print(f"{path}: {ran} snippet(s) ran, {skipped} skipped")
+    for path, line, tb in failures:
+        print(f"\nFAILED {path}:{line}\n{tb}", file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} snippet(s) failed", file=sys.stderr)
+        return 1
+    if total_ran == 0:
+        print("no runnable snippets found — nothing checked", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
