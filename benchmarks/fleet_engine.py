@@ -15,6 +15,7 @@ json lines with the headline numbers for the driver.
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import numpy as np
@@ -172,6 +173,66 @@ def run() -> list[Row]:
         "rounds": n_rounds,
         "round_ms": round(us_round / 1e3, 2),
         "collector_devsec_per_s": round(thr_col),
+    }))
+
+    # -- trace store: columnar archive vs CSV, chunked replay throughput --
+    # One day of a 16-device job at 30 s scrapes, replayed through the
+    # rollup two ways: materialize-everything CSV vs O(chunk) streaming
+    # over the columnar archive (hour-long polls crossing chunk bounds).
+    import tempfile
+
+    from repro.telemetry.source import TraceReplaySource, read_trace, \
+        write_trace
+    from repro.telemetry.tracestore import archive_nbytes
+
+    n_dev_t, day_s = 16, 86400.0
+    grid = simulate_devices(PROFILE, duration_s=day_s,
+                            interval_s=INTERVAL_S, events=EVENTS,
+                            n_devices=n_dev_t, seed=3)
+    n_cells = grid.tpa.size
+    with tempfile.TemporaryDirectory() as tmp:
+        csv_path = os.path.join(tmp, "day.csv")
+        ctr_path = os.path.join(tmp, "day.ctr")
+        write_trace(grid, csv_path)
+        write_trace(grid, ctr_path, chunk_samples=512)
+        csv_b, ctr_b = os.path.getsize(csv_path), archive_nbytes(ctr_path)
+
+        def _csv_replay():
+            roll = StreamingRollup(bucket_s=1800.0)
+            roll.add_grid("day", read_trace(csv_path))
+            return roll
+
+        def _chunked_replay():
+            roll = StreamingRollup(bucket_s=1800.0)
+            src = TraceReplaySource(ctr_path)
+            while not src.exhausted:
+                g = src.poll(3600.0)
+                if g.tpa.size:
+                    roll.add_grid("day", g)
+            return src.reader, roll
+
+        _, us_csv = timed(_csv_replay, repeat=3)
+        (reader, _), us_chunk = timed(_chunked_replay, repeat=3)
+    compression = csv_b / ctr_b
+    thr_csv = n_cells / (us_csv / 1e6)
+    thr_chunk = n_cells / (us_chunk / 1e6)
+    resident_frac = reader.peak_resident_samples / n_cells
+    rows.append(Row("fleet_engine.trace_replay_csv_1day", us_csv,
+                    f"samples_per_s={thr_csv:.0f} bytes={csv_b}"))
+    rows.append(Row("fleet_engine.trace_replay_chunked_1day", us_chunk,
+                    f"samples_per_s={thr_chunk:.0f} bytes={ctr_b} "
+                    f"compression={compression:.1f}x "
+                    f"peak_resident_frac={resident_frac:.3f}"))
+    print("BENCH " + json.dumps({
+        "name": "trace_store",
+        "devices": n_dev_t,
+        "samples": n_cells,
+        "csv_bytes": csv_b,
+        "columnar_bytes": ctr_b,
+        "compression_x": round(compression, 1),
+        "csv_replay_samples_per_s": round(thr_csv),
+        "chunked_replay_samples_per_s": round(thr_chunk),
+        "peak_resident_frac": round(resident_frac, 4),
     }))
     return rows
 

@@ -35,6 +35,7 @@ from repro.fleet.divergence import JobPoint
 from repro.fleet.regression import detect_regressions, scan_rollup
 from repro.telemetry import (Event, SimulatorSource, StepProfile,
                              TraceReplaySource, write_trace)
+from repro.telemetry.tracestore import archive_nbytes
 
 
 def main():
@@ -139,6 +140,32 @@ def main():
         for jid, regs in found.items():
             print(f"  {trace_path} -> {jid}: {len(regs)} regression(s), "
                   f"factor {regs[0].factor:.2f}x")
+
+        # the fleet-scale archive path: the same trace as a chunked
+        # COLUMNAR store (telemetry/tracestore.py) — smaller on disk,
+        # and replayable in O(chunk) memory instead of O(trace)
+        ctr_path = trace_path + ".ctr"
+        write_trace(tels["embodied-agent"].grid, ctr_path,
+                    chunk_samples=8)
+        ctr_src = TraceReplaySource(ctr_path)
+        ctr_roll = StreamingRollup(bucket_s=120)
+        while not ctr_src.exhausted:          # stream, chunk by chunk
+            grid = ctr_src.poll(240)
+            if grid.tpa.size:
+                ctr_roll.add_grid("archived-agent", grid, group="bf16",
+                                  chips=256)
+        rd = ctr_src.reader
+        jsonl_b = os.path.getsize(trace_path)
+        ctr_b = archive_nbytes(ctr_path)
+        total = tels["embodied-agent"].grid.tpa.size
+        found = scan_rollup(ctr_roll, window=2, min_duration=1)
+        print(f"  columnar archive: {ctr_b:,} B vs {jsonl_b:,} B jsonl "
+              f"({jsonl_b / ctr_b:.1f}x smaller), peak resident "
+              f"{rd.peak_resident_samples}/{total} samples, regression "
+              f"still detected: {'archived-agent' in found}")
+        for f in os.listdir(ctr_path):
+            os.unlink(os.path.join(ctr_path, f))
+        os.rmdir(ctr_path)
     finally:
         os.unlink(trace_path)
 

@@ -288,15 +288,33 @@ class Collector:
     """
 
     def __init__(self, streams: Sequence[JobStream],
-                 config: Optional[CollectorConfig] = None):
+                 config: Optional[CollectorConfig] = None, *,
+                 rollup: Optional[WindowedRollup] = None,
+                 clock_s: float = 0.0, round_idx: int = 0):
+        """`rollup`/`clock_s`/`round_idx` restore a collector from a
+        `snapshot()` across a process restart: pass
+        `WindowedRollup.from_bytes(snap)` plus the old collector's clock
+        and round count, and `seek()` each replay source to where its
+        predecessor's cursor stood — polling resumes mid-trace with the
+        retained window intact (alert-episode hysteresis state is NOT
+        part of the snapshot; an episode still open across the restart
+        re-fires once)."""
         self.streams = list(streams)
         ids = [st.job_id for st in self.streams]
         if len(set(ids)) != len(ids):
             raise ValueError(f"duplicate job_ids in streams: {ids}")
         self.config = config or CollectorConfig()
         cfg = self.config
-        self.rollup = WindowedRollup(cfg.bucket_s, retain=cfg.retain,
-                                     bins=cfg.bins)
+        if rollup is not None and (rollup.bucket_s != cfg.bucket_s
+                                   or rollup.retain != cfg.retain
+                                   or rollup.bins != cfg.bins):
+            raise ValueError(
+                f"restored rollup (bucket_s={rollup.bucket_s}, "
+                f"retain={rollup.retain}, bins={rollup.bins}) does not "
+                f"match config (bucket_s={cfg.bucket_s}, "
+                f"retain={cfg.retain}, bins={cfg.bins})")
+        self.rollup = rollup if rollup is not None else WindowedRollup(
+            cfg.bucket_s, retain=cfg.retain, bins=cfg.bins)
         self.controller = (AdaptiveScrapeController(cfg.adaptive)
                            if cfg.adaptive else None)
         # eviction drifts a detection's start index by at most the
@@ -305,8 +323,8 @@ class Collector:
         self.deduper = AlertDeduper(
             cfg.clear_rounds,
             anchor_tolerance=cfg.detector.get("window", 10))
-        self.round_idx = 0
-        self.clock_s = 0.0
+        self.round_idx = int(round_idx)
+        self.clock_s = float(clock_s)
         self.alerts: list = []       # every alert ever fired, in order
 
     @property

@@ -9,3 +9,6 @@ from repro.telemetry.source import (  # noqa: F401
     BackendSource, SimulatorSource, TelemetrySource, TraceReplaySource,
     read_trace, write_trace,
 )
+from repro.telemetry.tracestore import (  # noqa: F401
+    TraceReader, TraceWriter, read_archive, write_archive,
+)

@@ -10,13 +10,23 @@ engine (`SimulatorSource`), a per-poll `CounterBackend` loop
 recorded trace (`TraceReplaySource`).  Deploying against real hardware
 telemetry means adding one more source, not touching the pipeline.
 
-Trace format (CSV with header, or JSONL — one record per line):
+Trace formats:
 
-    t_s,device,tpa,clock_mhz
-    30.0,0,0.412,1328.5
+- CSV (with header) / JSONL — one record per line, the interchange path:
 
-`write_trace`/`read_trace` round-trip a `DeviceGrid` exactly (floats are
-serialized at full repr precision).
+      t_s,device,tpa,clock_mhz
+      30.0,0,0.412,1328.5
+
+  `write_trace`/`read_trace` round-trip a `DeviceGrid` exactly (floats
+  are serialized at full repr precision).
+
+- Columnar chunked archive (`telemetry/tracestore.py`) — a directory of
+  compressed npz column chunks plus a JSON manifest; ~6× smaller than
+  CSV and the only format `TraceReplaySource` can STREAM: `poll()` over
+  an archive decodes O(chunk) samples, never the whole trace, so a
+  multi-week archive replays in constant memory.  `write_trace` /
+  `read_trace` dispatch to it for `.ctr` paths (and `fmt="columnar"`);
+  `tools/trace_convert.py` converts between all three.
 
 Sources are also RESUMABLE: `poll(duration_s)` scrapes the next chunk of
 wall-time from a per-source cursor (grids come back with the right
@@ -32,12 +42,14 @@ from __future__ import annotations
 
 import csv
 import json
+import os
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.peaks import DEFAULT_CHIP, ChipSpec
+from repro.telemetry import tracestore
 from repro.telemetry.counters import (CounterBackend, Event, StepProfile,
                                       check_scrape_interval)
 from repro.telemetry.scrape import DeviceGrid, scrape
@@ -236,14 +248,22 @@ class TraceReplaySource(TelemetrySource):
     """Replays recorded (t_s, device, tpa, clock_mhz) scrapes from disk.
 
     Not retimable: the cadence is whatever the recorder used.  `poll`
-    slices the cached trace by the recorded timestamps, so a collector
-    replays an archive round-for-round exactly as it would watch a live
-    fleet (polls before the trace's first sample return empty grids).
+    slices the trace by the recorded timestamps, so a collector replays
+    an archive round-for-round exactly as it would watch a live fleet
+    (polls before the trace's first sample return empty grids).
+
+    Row formats (CSV/JSONL) are materialized once and sliced; a COLUMNAR
+    archive (`tracestore.TraceReader`) streams instead — each poll
+    decodes only the chunks spanning it, so peak memory is O(chunk) even
+    for a multi-week trace, and `exhausted` comes from the manifest
+    without touching a single chunk.  `seek(t_s)` repositions the cursor
+    (the restart path: resume replay where a snapshotted collector left
+    off).
     """
 
     path: str
-    fmt: str = "auto"            # 'csv' | 'jsonl' | 'auto' (by suffix)
-    interval_s: Optional[float] = None   # required for 1-sample traces
+    fmt: str = "auto"        # 'csv' | 'jsonl' | 'columnar' | 'auto'
+    interval_s: Optional[float] = None   # required for 1-sample row traces
 
     retimable = False
 
@@ -253,29 +273,68 @@ class TraceReplaySource(TelemetrySource):
         return read_trace(self.path, fmt=self.fmt,
                           interval_s=self.interval_s)
 
+    @property
+    def reader(self) -> Optional[tracestore.TraceReader]:
+        """The archive reader behind a columnar source (None for row
+        formats) — exposes the streaming instrumentation."""
+        rd = getattr(self, "_reader", None)
+        if rd is None and not getattr(self, "_row_fmt", False):
+            if _resolve_fmt(self.path, self.fmt) == "columnar":
+                rd = self._reader = tracestore.TraceReader(self.path)
+            else:
+                self._row_fmt = True     # don't re-stat on every poll
+        return rd
+
     def _cached(self) -> DeviceGrid:
         grid = getattr(self, "_grid", None)
         if grid is None:
             grid = self._grid = self.scrapes()
         return grid
 
+    def _span(self) -> tuple:
+        """(t0_s, interval_s, n_samples) without materializing an
+        archive; row traces still load once here."""
+        rd = self.reader
+        if rd is not None:
+            return rd.t0_s, rd.interval_s, rd.n_samples
+        grid = self._cached()
+        return grid.t0_s, grid.interval_s, grid.tpa.shape[1]
+
     @property
     def exhausted(self) -> bool:
-        grid = self._cached()
-        times = grid.times_s
-        return not len(times) or self.cursor_s >= times[-1] - 1e-9
+        t0, iv, n = self._span()
+        return not n or self.cursor_s >= tracestore.sample_time(
+            t0, iv, n - 1) - 1e-9
+
+    def seek(self, t_s: float) -> None:
+        """Reposition the replay cursor (absolute trace time) — the next
+        poll() resumes there, e.g. after a collector snapshot restore."""
+        if t_s < 0:
+            raise ValueError(f"seek target {t_s}s must be >= 0")
+        self._cursor_s = float(t_s)
 
     def poll(self, duration_s: float) -> DeviceGrid:
-        grid = self._cached()
         if duration_s <= 0:
             raise ValueError(f"poll duration {duration_s}s must be positive")
         c = self.cursor_s
-        times = grid.times_s
-        i0, i1 = np.searchsorted(times, [c + 1e-9, c + duration_s + 1e-9])
-        sub = DeviceGrid(grid.interval_s, grid.tpa[:, i0:i1],
-                         grid.clock_mhz[:, i0:i1],
-                         t0_s=float(times[i0]) - grid.interval_s
-                         if i1 > i0 else c)
+        rd = self.reader
+        if rd is not None:
+            # stream: manifest index -> sample range -> spanning chunks
+            i0 = rd.searchsorted(c + 1e-9)
+            i1 = rd.searchsorted(c + duration_s + 1e-9)
+            tpa, clk = rd.read_samples(i0, i1)
+            t0 = tracestore.sample_time(rd.t0_s, rd.interval_s, i0) \
+                - rd.interval_s if i1 > i0 else c
+            sub = DeviceGrid(rd.interval_s, tpa, clk, t0_s=t0)
+        else:
+            grid = self._cached()
+            times = grid.times_s
+            i0, i1 = np.searchsorted(times,
+                                     [c + 1e-9, c + duration_s + 1e-9])
+            sub = DeviceGrid(grid.interval_s, grid.tpa[:, i0:i1],
+                             grid.clock_mhz[:, i0:i1],
+                             t0_s=float(times[i0]) - grid.interval_s
+                             if i1 > i0 else c)
         self._cursor_s = c + duration_s   # wall clock advances regardless
         return sub
 
@@ -285,21 +344,38 @@ _FIELDS = ("t_s", "device", "tpa", "clock_mhz")
 
 def _resolve_fmt(path: str, fmt: str) -> str:
     if fmt != "auto":
-        if fmt not in ("csv", "jsonl"):
+        if fmt not in ("csv", "jsonl", "columnar"):
             raise ValueError(f"unknown trace format {fmt!r}")
         return fmt
-    low = str(path).lower()
+    path = str(path)
+    if os.path.isdir(path):
+        if tracestore.is_archive(path):
+            return "columnar"
+        raise ValueError(
+            f"{path!r} is a directory but not a columnar trace archive "
+            f"(no {tracestore.MANIFEST_NAME}); pass fmt explicitly if "
+            "this is intentional")
+    low = path.lower()
+    if low.endswith(tracestore.COLUMNAR_SUFFIX):
+        return "columnar"
     if low.endswith(".csv"):
         return "csv"
     if low.endswith((".jsonl", ".ndjson", ".json")):
         return "jsonl"
     raise ValueError(f"cannot infer trace format from {path!r}; "
-                     "pass fmt='csv' or 'jsonl'")
+                     "pass fmt='csv', 'jsonl', or 'columnar'")
 
 
-def write_trace(grid: DeviceGrid, path: str, *, fmt: str = "auto") -> None:
-    """Record a DeviceGrid as a replayable scrape trace (CSV or JSONL)."""
+def write_trace(grid: DeviceGrid, path: str, *, fmt: str = "auto",
+                chunk_samples: int = tracestore.DEFAULT_CHUNK_SAMPLES
+                ) -> None:
+    """Record a DeviceGrid as a replayable scrape trace (CSV, JSONL, or
+    a chunked columnar archive for `.ctr`/fmt='columnar' paths —
+    `chunk_samples` applies only there)."""
     fmt = _resolve_fmt(path, fmt)
+    if fmt == "columnar":
+        tracestore.write_archive(grid, path, chunk_samples=chunk_samples)
+        return
     # bulk-convert once (tolist yields Python floats, repr-exact) instead
     # of a per-cell numpy-scalar conversion — fleet grids are millions of
     # samples and the trace writer must not dwarf the ~ms simulation
@@ -322,38 +398,100 @@ def write_trace(grid: DeviceGrid, path: str, *, fmt: str = "auto") -> None:
                 for t, a, c in zip(times_f, tpa[d], clk[d]))
 
 
+def _is_float(cell: str) -> bool:
+    try:
+        float(cell)
+        return True
+    except (TypeError, ValueError):
+        return False
+
+
+def _parse_csv(path: str, fh) -> list:
+    rd = csv.reader(fh)
+    header = next(rd, None)
+    if header is None:
+        return []
+    col = {name.strip(): k for k, name in enumerate(header)}
+    missing = [f for f in _FIELDS if f not in col]
+    if missing:
+        # distinguish "wrong columns" from "no header at all": a first
+        # row of four numbers is DATA — silently skipping it used to
+        # drop one poll per device and shift the inferred t0
+        if len(header) >= len(_FIELDS) \
+                and all(_is_float(c) for c in header[:len(_FIELDS)]):
+            raise ValueError(
+                f"trace {path!r} has no header row (first line parses as "
+                f"data: {','.join(header)!r}); expected columns "
+                f"{','.join(_FIELDS)}")
+        raise ValueError(f"trace {path!r} header is missing "
+                         f"column(s) {missing}")
+    idx = [col[f] for f in _FIELDS]
+    need = max(idx) + 1
+    recs = []
+    for ln, row in enumerate(rd, start=2):
+        if not row:
+            continue
+        if len(row) < need:
+            raise ValueError(
+                f"trace {path!r} line {ln}: truncated row has "
+                f"{len(row)} field(s), header promises >= {need}")
+        try:
+            recs.append((float(row[idx[0]]), int(row[idx[1]]),
+                         float(row[idx[2]]), float(row[idx[3]])))
+        except ValueError as e:
+            raise ValueError(f"trace {path!r} line {ln}: malformed "
+                             f"value in {row!r} ({e})") from None
+    return recs
+
+
+def _parse_jsonl(path: str, fh) -> list:
+    recs = []
+    for ln, line in enumerate(fh, start=1):
+        if not line.strip():
+            continue
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"trace {path!r} line {ln}: invalid JSON "
+                             f"({e})") from None
+        if not isinstance(r, dict):
+            raise ValueError(
+                f"trace {path!r} line {ln}: record is {type(r).__name__}, "
+                "expected one JSON object per line (a whole-file JSON "
+                "array is not a JSONL trace)")
+        missing = [f for f in _FIELDS if f not in r]
+        if missing:
+            raise ValueError(f"trace {path!r} line {ln}: record is "
+                             f"missing key(s) {missing}")
+        try:
+            recs.append((float(r["t_s"]), int(r["device"]),
+                         float(r["tpa"]), float(r["clock_mhz"])))
+        except (TypeError, ValueError) as e:
+            raise ValueError(f"trace {path!r} line {ln}: malformed "
+                             f"value ({e})") from None
+    return recs
+
+
 def read_trace(path: str, *, fmt: str = "auto",
                interval_s: Optional[float] = None) -> DeviceGrid:
     """Load a scrape trace back into an aligned DeviceGrid.
 
-    Requires a rectangular trace: every device sampled the same number of
-    times (what any fixed-interval scraper produces; per-device timestamp
-    jitter is fine — samples align by poll rank).  The scrape interval is
-    inferred from the poll-instant spacing unless given explicitly; a
-    single-poll trace cannot be inferred and needs interval_s.
+    Row formats require a rectangular trace: every device sampled the
+    same number of times (what any fixed-interval scraper produces;
+    per-device timestamp jitter is fine — samples align by poll rank).
+    The scrape interval is inferred from the poll-instant spacing unless
+    given explicitly; a single-poll trace cannot be inferred and needs
+    interval_s.  Malformed input (missing/implied header, truncated rows,
+    non-object JSONL records, unparseable values) is REJECTED with the
+    offending line, never silently mis-parsed.  Columnar archives are
+    validated by `tracestore.TraceReader` and carry their own interval.
     """
     fmt = _resolve_fmt(path, fmt)
-    recs = []
+    if fmt == "columnar":
+        return tracestore.read_archive(path, interval_s=interval_s)
     with open(path, newline="") as fh:
-        if fmt == "csv":
-            rd = csv.reader(fh)
-            header = next(rd, None)
-            if header is not None:
-                col = {name: k for k, name in enumerate(header)}
-                missing = [f for f in _FIELDS if f not in col]
-                if missing:
-                    raise ValueError(f"trace {path!r} header is missing "
-                                     f"column(s) {missing}")
-                it, id_, ia, ic = (col[f] for f in _FIELDS)
-                recs = [(float(row[it]), int(row[id_]),
-                         float(row[ia]), float(row[ic])) for row in rd]
-        else:
-            for line in fh:
-                if not line.strip():
-                    continue
-                r = json.loads(line)
-                recs.append((float(r["t_s"]), int(r["device"]),
-                             float(r["tpa"]), float(r["clock_mhz"])))
+        recs = _parse_csv(path, fh) if fmt == "csv" \
+            else _parse_jsonl(path, fh)
     if not recs:
         return DeviceGrid(0.0, np.empty((0, 0)), np.empty((0, 0)))
     # align samples by per-device time RANK, not exact timestamp equality:

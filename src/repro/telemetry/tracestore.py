@@ -1,0 +1,476 @@
+"""Chunked columnar trace archive: the fleet-scale storage layer under
+`TraceReplaySource` (ROADMAP "columnar trace format + chunked/streaming
+replay" — months of archived counter scrapes are where fleet tooling
+lives or dies).
+
+An archive is a DIRECTORY:
+
+    trace.ctr/
+      manifest.json          # format, interval_s, n_devices, chunk index
+      chunk-000000.npz       # {"tpa": (D, S), "clock_mhz": (D, S)}
+      chunk-000001.npz
+      ...
+
+Counters are stored as columns in their NATIVE dtype (the engine emits
+float32: ~8 B/sample vs ~50 B/sample for repr'd CSV text), compressed
+per chunk (`np.savez_compressed`), with timestamps IMPLICIT: the grid is
+uniform, so the manifest's `t0_s`/`interval_s` plus each chunk's sample
+offset reconstruct every poll instant exactly — a multi-day archive
+spends zero bytes on time or device columns.
+
+`TraceWriter` is append-only (buffer → full chunk → flush; the manifest
+is rewritten after every flush, so a killed recorder leaves a valid
+archive minus its buffered tail).  `TraceReader` random-accesses sample
+ranges by loading only the chunks that span them — peak decoded state is
+O(chunk), never O(trace) — and instruments itself
+(`peak_resident_samples`, `chunks_decoded`) so tests can ASSERT the
+memory bound instead of trusting it.
+
+CSV/JSONL (`source.write_trace`/`read_trace`) remain the interchange
+path; `tools/trace_convert.py` converts between the three formats.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Iterator, Optional, Sequence
+
+import numpy as np
+
+from repro.telemetry.scrape import DeviceGrid
+
+MANIFEST_NAME = "manifest.json"
+FORMAT_TAG = "ctr-v1"
+#: directory suffix `_resolve_fmt` sniffs as columnar even before the
+#: archive exists (so a writer target can be format-inferred too)
+COLUMNAR_SUFFIX = ".ctr"
+DEFAULT_CHUNK_SAMPLES = 4096
+
+
+def is_archive(path: str) -> bool:
+    """True if path is (or names) a columnar trace archive directory."""
+    return os.path.isfile(os.path.join(path, MANIFEST_NAME))
+
+
+def sample_time(t0_s: float, interval_s: float, k: int) -> float:
+    """Poll instant of 0-based sample k (window END, matching
+    `DeviceGrid.times_s` bit-for-bit: t0 + (k+1)·interval in float64)."""
+    return t0_s + (k + 1) * interval_s
+
+
+def uniform_searchsorted(t0_s: float, interval_s: float, n: int,
+                         x: float) -> int:
+    """`np.searchsorted(times, x)` over the IMPLICIT uniform times array
+    — O(1), no materialization.  Returns the smallest k in [0, n] with
+    sample_time(k) >= x (side='left' semantics)."""
+    if n <= 0:
+        return 0
+    # start provably at-or-below the answer, then walk up (float division
+    # error is < 1 ulp, so this loop runs at most a few steps)
+    k = min(max(int((x - t0_s) / interval_s) - 2, 0), n)
+    while k < n and sample_time(t0_s, interval_s, k) < x:
+        k += 1
+    return k
+
+
+@dataclass
+class ChunkInfo:
+    """One chunk's manifest entry."""
+
+    file: str
+    t0_s: float                  # absolute start of the chunk's first window
+    n_samples: int
+
+
+def _check(cond: bool, path: str, msg: str) -> None:
+    if not cond:
+        raise ValueError(f"corrupt trace archive {path!r}: {msg}")
+
+
+class TraceWriter:
+    """Append-only columnar trace recorder.
+
+    Samples accumulate in a buffer; full `chunk_samples`-column chunks
+    flush as compressed npz files and the manifest is rewritten, so the
+    on-disk archive is valid after every flush.  Use as a context
+    manager (`close()` flushes the final partial chunk).
+
+    `append(tpa, clock_mhz)` takes aligned `(n_devices,)` or
+    `(n_devices, s)` counter columns; `append_grid(grid)` additionally
+    enforces that the grid CONTINUES the archive (same interval and
+    device count, `t0_s` equal to the archive's current end) — the shape
+    a `poll()`-driven recorder produces round after round.
+
+    `append=True` reopens an existing archive and continues it (the
+    restart path for a long-lived recorder).
+    """
+
+    def __init__(self, path: str, interval_s: float, n_devices: int, *,
+                 chunk_samples: int = DEFAULT_CHUNK_SAMPLES,
+                 t0_s: float = 0.0, append: bool = False):
+        if interval_s <= 0:
+            raise ValueError(f"interval_s={interval_s} must be positive")
+        if n_devices < 1:
+            raise ValueError(f"n_devices={n_devices} must be >= 1")
+        if chunk_samples < 1:
+            raise ValueError(f"chunk_samples={chunk_samples} must be >= 1")
+        self.path = str(path)
+        self.interval_s = float(interval_s)
+        self.n_devices = int(n_devices)
+        self.chunk_samples = int(chunk_samples)
+        self.t0_s = float(t0_s)
+        self.chunks: list = []
+        self.n_samples = 0           # flushed samples (excludes the buffer)
+        self._buf: list = []
+        self._buffered = 0
+        self._dtype = None
+        self._closed = False
+        if append and is_archive(self.path):
+            rd = TraceReader(self.path)
+            if rd.interval_s != self.interval_s \
+                    or rd.n_devices != self.n_devices:
+                raise ValueError(
+                    f"cannot append to {path!r}: archive has "
+                    f"interval_s={rd.interval_s}/n_devices={rd.n_devices}, "
+                    f"writer asked for {self.interval_s}/{self.n_devices}")
+            self.t0_s = rd.t0_s
+            self.chunks = list(rd.chunks)
+            self.n_samples = rd.n_samples
+            self._dtype = rd.dtype
+        elif is_archive(self.path):
+            raise ValueError(f"{path!r} is already a trace archive; pass "
+                             "append=True to continue it")
+        os.makedirs(self.path, exist_ok=True)
+
+    # -- recording ------------------------------------------------------
+    @property
+    def total_samples(self) -> int:
+        """Flushed + buffered samples (what close() will have written)."""
+        return self.n_samples + self._buffered
+
+    @property
+    def end_s(self) -> float:
+        """Absolute time the archive will cover through after close()."""
+        return sample_time(self.t0_s, self.interval_s,
+                           self.total_samples - 1) \
+            if self.total_samples else self.t0_s
+
+    def append(self, tpa: np.ndarray, clock_mhz: np.ndarray) -> None:
+        """Append aligned counter columns: (n_devices,) or (n_devices, s)."""
+        if self._closed:
+            raise ValueError("TraceWriter is closed")
+        tpa = np.atleast_2d(np.asarray(tpa).T).T   # (D,) -> (D, 1)
+        clk = np.atleast_2d(np.asarray(clock_mhz).T).T
+        if tpa.shape != clk.shape or tpa.shape[0] != self.n_devices:
+            raise ValueError(
+                f"misaligned append: tpa {tpa.shape} / clock {clk.shape} "
+                f"vs n_devices={self.n_devices}")
+        if tpa.shape[1] == 0:
+            return
+        want = np.result_type(tpa, clk)
+        if self._dtype is None:
+            self._dtype = want
+        elif not np.can_cast(want, self._dtype, casting="safe"):
+            # never quantize silently: a float64 append into a float32
+            # archive would corrupt the exact-roundtrip contract
+            raise ValueError(
+                f"cannot append {want} samples to a "
+                f"{np.dtype(self._dtype).name} archive without losing "
+                "precision; write a new archive at the wider dtype")
+        self._buf.append((tpa.astype(self._dtype, copy=False),
+                          clk.astype(self._dtype, copy=False)))
+        self._buffered += tpa.shape[1]
+        if self._buffered >= self.chunk_samples:
+            self._drain()
+
+    def append_grid(self, grid: DeviceGrid) -> None:
+        """Append a DeviceGrid that CONTINUES the archive exactly."""
+        if grid.tpa.shape[1] == 0:
+            return
+        tol = 1e-6 * self.interval_s
+        if abs(grid.interval_s - self.interval_s) > tol:
+            raise ValueError(
+                f"grid interval {grid.interval_s}s does not match archive "
+                f"interval {self.interval_s}s")
+        if grid.n_devices != self.n_devices:
+            raise ValueError(f"grid has {grid.n_devices} devices, archive "
+                             f"has {self.n_devices}")
+        if abs(grid.t0_s - self.end_s) > tol:
+            raise ValueError(
+                f"grid t0_s={grid.t0_s}s does not continue the archive "
+                f"(current end {self.end_s}s) — archives must be gapless "
+                "so timestamps stay implicit")
+        self.append(grid.tpa, grid.clock_mhz)
+
+    # -- persistence ----------------------------------------------------
+    def _drain(self, final: bool = False) -> None:
+        """Flush every full chunk in the buffer (all of it when final).
+
+        One concatenation per drain, then sliced chunk writes — each
+        sample is copied O(1) times however large the one-shot append
+        was, instead of re-concatenating the shrinking tail per chunk.
+        The manifest is rewritten once per drain; chunk files written
+        before a crash mid-drain are simply not indexed yet and get
+        overwritten on the next run.
+        """
+        if not self._buffered:
+            return
+        tpa = self._buf[0][0] if len(self._buf) == 1 \
+            else np.concatenate([t for t, _ in self._buf], axis=1)
+        clk = self._buf[0][1] if len(self._buf) == 1 \
+            else np.concatenate([c for _, c in self._buf], axis=1)
+        pos = 0
+        while self._buffered - pos >= self.chunk_samples \
+                or (final and self._buffered > pos):
+            take = min(self.chunk_samples, self._buffered - pos)
+            name = f"chunk-{len(self.chunks):06d}.npz"
+            np.savez_compressed(os.path.join(self.path, name),
+                                tpa=tpa[:, pos:pos + take],
+                                clock_mhz=clk[:, pos:pos + take])
+            self.chunks.append(ChunkInfo(
+                name, sample_time(self.t0_s, self.interval_s,
+                                  self.n_samples - 1), take))
+            self.n_samples += take
+            pos += take
+        self._buf = [(tpa[:, pos:], clk[:, pos:])] if pos < self._buffered \
+            else []
+        self._buffered -= pos
+        self._write_manifest()
+
+    def _write_manifest(self) -> None:
+        manifest = {
+            "format": FORMAT_TAG,
+            "interval_s": self.interval_s,
+            "n_devices": self.n_devices,
+            "t0_s": self.t0_s,
+            "dtype": np.dtype(self._dtype or np.float64).name,
+            "chunk_samples": self.chunk_samples,
+            "n_samples": self.n_samples,
+            "chunks": [{"file": c.file, "t0_s": c.t0_s,
+                        "n_samples": c.n_samples} for c in self.chunks],
+        }
+        tmp = os.path.join(self.path, MANIFEST_NAME + ".tmp")
+        with open(tmp, "w") as fh:
+            json.dump(manifest, fh, indent=1)
+            fh.write("\n")
+        os.replace(tmp, os.path.join(self.path, MANIFEST_NAME))
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        if self._buffered:
+            self._drain(final=True)
+        else:
+            self._write_manifest()      # valid even with zero samples
+        self._closed = True
+
+    def __enter__(self) -> "TraceWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class TraceReader:
+    """Random-access view over a columnar archive; loads O(chunk) at a
+    time.
+
+    The manifest is validated up front (format tag, chunk contiguity,
+    file presence, sample-count consistency) so a truncated or
+    hand-edited archive fails loudly at open, not as silently wrong
+    replay.  `read_samples(i0, i1)` decodes only the chunks spanning the
+    range (with a one-chunk cache for boundary-crossing polls);
+    `iter_chunks()` streams chunk-sized `DeviceGrid`s;
+    `peak_resident_samples` / `chunks_decoded` expose the memory story
+    to tests.
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        mf = os.path.join(self.path, MANIFEST_NAME)
+        if not os.path.isfile(mf):
+            raise ValueError(f"{self.path!r} is not a columnar trace "
+                             f"archive (no {MANIFEST_NAME})")
+        try:
+            with open(mf) as fh:
+                m = json.load(fh)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"corrupt trace archive {self.path!r}: "
+                             f"unreadable manifest ({e})") from e
+        _check(isinstance(m, dict) and m.get("format") == FORMAT_TAG,
+               self.path, f"manifest format is {m.get('format')!r}, "
+               f"expected {FORMAT_TAG!r}")
+        for key in ("interval_s", "n_devices", "t0_s", "n_samples",
+                    "chunks"):
+            _check(key in m, self.path, f"manifest missing key {key!r}")
+        self.interval_s = float(m["interval_s"])
+        _check(self.interval_s > 0, self.path,
+               f"interval_s={self.interval_s} must be positive")
+        self.n_devices = int(m["n_devices"])
+        self.t0_s = float(m["t0_s"])
+        self.dtype = np.dtype(m.get("dtype", "float64"))
+        self.chunks = []
+        cum = 0
+        tol = 1e-6 * self.interval_s
+        for k, c in enumerate(m["chunks"]):
+            _check(isinstance(c, dict)
+                   and all(f in c for f in ("file", "t0_s", "n_samples")),
+                   self.path, f"malformed chunk entry #{k}: {c!r}")
+            info = ChunkInfo(str(c["file"]), float(c["t0_s"]),
+                             int(c["n_samples"]))
+            _check(info.n_samples > 0, self.path,
+                   f"chunk {info.file!r} has n_samples={info.n_samples}")
+            _check(os.path.isfile(os.path.join(self.path, info.file)),
+                   self.path, f"chunk file {info.file!r} is missing")
+            want_t0 = sample_time(self.t0_s, self.interval_s, cum - 1)
+            _check(abs(info.t0_s - want_t0) <= tol, self.path,
+                   f"chunk {info.file!r} starts at {info.t0_s}s, expected "
+                   f"{want_t0}s (chunks must be contiguous)")
+            self.chunks.append(info)
+            cum += info.n_samples
+        self.n_samples = int(m["n_samples"])
+        _check(self.n_samples == cum, self.path,
+               f"manifest n_samples={self.n_samples} but chunks hold {cum}")
+        #: chunk k covers global samples [_starts[k], _starts[k+1])
+        self._starts = np.concatenate(
+            [[0], np.cumsum([c.n_samples for c in self.chunks])]).astype(int)
+        self._cache: Optional[tuple] = None    # (chunk_idx, tpa, clk)
+        self.chunks_decoded = 0
+        self.peak_resident_samples = 0
+
+    # -- geometry -------------------------------------------------------
+    @property
+    def duration_s(self) -> float:
+        return self.n_samples * self.interval_s
+
+    @property
+    def end_s(self) -> float:
+        """Poll instant of the last sample (== t0_s for an empty archive)."""
+        return sample_time(self.t0_s, self.interval_s, self.n_samples - 1) \
+            if self.n_samples else self.t0_s
+
+    def chunk_start(self, k: int) -> int:
+        """Global index of chunk k's first sample."""
+        return int(self._starts[k])
+
+    def searchsorted(self, x: float) -> int:
+        """Global index of the first sample whose poll instant is >= x."""
+        return uniform_searchsorted(self.t0_s, self.interval_s,
+                                    self.n_samples, x)
+
+    # -- decoding -------------------------------------------------------
+    def _decode(self, k: int) -> tuple:
+        if self._cache is not None and self._cache[0] == k:
+            return self._cache[1], self._cache[2]
+        info = self.chunks[k]
+        with np.load(os.path.join(self.path, info.file)) as z:
+            _check("tpa" in z and "clock_mhz" in z, self.path,
+                   f"chunk {info.file!r} is missing counter arrays")
+            tpa, clk = z["tpa"], z["clock_mhz"]
+        want = (self.n_devices, info.n_samples)
+        _check(tpa.shape == want and clk.shape == want, self.path,
+               f"chunk {info.file!r} arrays are {tpa.shape}/{clk.shape}, "
+               f"manifest says {want}")
+        self.chunks_decoded += 1
+        self._cache = (k, tpa, clk)
+        return tpa, clk
+
+    def read_samples(self, i0: int, i1: int) -> tuple:
+        """(tpa, clock_mhz) for global samples [i0, i1) — decodes only
+        the spanning chunks."""
+        i0 = max(int(i0), 0)
+        i1 = min(int(i1), self.n_samples)
+        if i1 <= i0:
+            shape = (self.n_devices, 0)
+            return (np.empty(shape, self.dtype), np.empty(shape, self.dtype))
+        k0 = int(np.searchsorted(self._starts, i0, side="right")) - 1
+        k1 = int(np.searchsorted(self._starts, i1, side="left"))
+        parts_t, parts_c, resident = [], [], 0
+        for k in range(k0, k1):
+            tpa, clk = self._decode(k)
+            lo = i0 - self.chunk_start(k)
+            hi = i1 - self.chunk_start(k)
+            parts_t.append(tpa[:, max(lo, 0):hi])
+            parts_c.append(clk[:, max(lo, 0):hi])
+            resident += self.chunks[k].n_samples * self.n_devices
+        self.peak_resident_samples = max(self.peak_resident_samples,
+                                         resident)
+        if len(parts_t) == 1:
+            return parts_t[0], parts_c[0]
+        return (np.concatenate(parts_t, axis=1),
+                np.concatenate(parts_c, axis=1))
+
+    # -- streaming / batch views ---------------------------------------
+    def iter_chunks(self, start_s: Optional[float] = None,
+                    stop_s: Optional[float] = None) -> Iterator[DeviceGrid]:
+        """Stream the archive chunk by chunk as `DeviceGrid`s (whole
+        chunks whose time span overlaps [start_s, stop_s]; use
+        `read_samples` for exact sub-chunk slicing)."""
+        for k, info in enumerate(self.chunks):
+            lo = sample_time(self.t0_s, self.interval_s,
+                             self.chunk_start(k))
+            hi = sample_time(self.t0_s, self.interval_s,
+                             self.chunk_start(k) + info.n_samples - 1)
+            if (stop_s is not None and lo > stop_s) \
+                    or (start_s is not None and hi < start_s):
+                continue
+            tpa, clk = self._decode(k)
+            self.peak_resident_samples = max(
+                self.peak_resident_samples,
+                info.n_samples * self.n_devices)
+            yield DeviceGrid(self.interval_s, tpa, clk, t0_s=info.t0_s)
+
+    def read_all(self) -> DeviceGrid:
+        """Materialize the whole archive (the batch `scrapes()` view —
+        O(trace) memory by definition; prefer iter_chunks/read_samples
+        for long archives)."""
+        if not self.n_samples:
+            return DeviceGrid(self.interval_s,
+                              np.empty((self.n_devices, 0), self.dtype),
+                              np.empty((self.n_devices, 0), self.dtype),
+                              t0_s=self.t0_s)
+        tpa, clk = self.read_samples(0, self.n_samples)
+        return DeviceGrid(self.interval_s, tpa, clk, t0_s=self.t0_s)
+
+    def summary(self) -> str:
+        span_h = self.duration_s / 3600.0
+        return (f"ctr_archive devices={self.n_devices} "
+                f"samples={self.n_samples} interval={self.interval_s:g}s "
+                f"span={span_h:.2f}h chunks={len(self.chunks)} "
+                f"dtype={self.dtype.name}")
+
+
+def write_archive(grid: DeviceGrid, path: str, *,
+                  chunk_samples: int = DEFAULT_CHUNK_SAMPLES) -> None:
+    """One-shot archive write of a DeviceGrid (the `write_trace`
+    dispatch target for columnar paths)."""
+    if grid.n_devices < 1 or grid.interval_s <= 0:
+        # e.g. the empty grid read_trace returns for a header-only CSV:
+        # row formats round-trip it, but an archive needs real geometry
+        raise ValueError(
+            f"cannot write a columnar archive from an empty/degenerate "
+            f"trace ({grid.n_devices} devices, interval "
+            f"{grid.interval_s}s); keep empty traces in CSV/JSONL")
+    with TraceWriter(path, grid.interval_s, grid.n_devices,
+                     chunk_samples=chunk_samples, t0_s=grid.t0_s) as w:
+        w.append(grid.tpa, grid.clock_mhz)
+
+
+def read_archive(path: str,
+                 interval_s: Optional[float] = None) -> DeviceGrid:
+    """One-shot archive read (the `read_trace` dispatch target)."""
+    rd = TraceReader(path)
+    if interval_s is not None \
+            and abs(interval_s - rd.interval_s) > 1e-6 * rd.interval_s:
+        raise ValueError(
+            f"explicit interval_s={interval_s} contradicts the archive "
+            f"manifest ({rd.interval_s}s) — columnar archives carry their "
+            "own interval")
+    return rd.read_all()
+
+
+def archive_nbytes(path: str) -> int:
+    """Total on-disk size of an archive directory (manifest + chunks)."""
+    return sum(os.path.getsize(os.path.join(path, f))
+               for f in os.listdir(path))

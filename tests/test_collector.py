@@ -416,3 +416,106 @@ def test_collector_config_guards():
         be = BackendSource([SimulatedDeviceBackend(PROFILE)],
                            duration_s=float("inf"), interval_s=30)
         Collector([JobStream("live", be)]).run()
+
+
+# ---------------------------------------------------------------------------
+# Chunked trace replay under the collector (ISSUE 4): poll rounds cross
+# chunk boundaries exactly, and a snapshot restore resumes mid-trace
+# ---------------------------------------------------------------------------
+def _regressed_trace(tmp_path, fmt_suffix, chunk_samples=40):
+    """A 1-hour 4-device trace with a 2.5x collapse at t=1800, recorded
+    to disk (chunk span 1200 s deliberately misaligned with the 300 s
+    collector round)."""
+    from repro.fleet.engine import simulate_devices
+    from repro.telemetry.source import write_trace
+    grid = simulate_devices(PROFILE, duration_s=3600, interval_s=30.0,
+                            events=[Event(1800, 3600, slowdown=2.5)],
+                            n_devices=4, seed=21)
+    path = str(tmp_path / f"trace{fmt_suffix}")
+    write_trace(grid, path, chunk_samples=chunk_samples)
+    return path
+
+
+def _replay_collector(path, **collector_kw):
+    from repro.telemetry.source import TraceReplaySource
+    streams = [JobStream("traced", TraceReplaySource(path), chips=128,
+                         group="bf16", app_mfu=0.38)]
+    cfg = CollectorConfig(round_s=300, bucket_s=300, retain=6,
+                          detector={"window": 3, "min_duration": 1})
+    return Collector(streams, cfg, **collector_kw)
+
+
+def _alert_keys(alerts):
+    return [(a.round_idx, a.job_id, a.kind) for a in alerts]
+
+
+def test_collector_chunked_replay_matches_inmemory_replay(tmp_path):
+    """The same trace through a chunked columnar archive and through a
+    fully-materialized CSV produces the same rounds, the same alert
+    episodes, and the same final windowed state — while the archive path
+    never holds more than O(chunk) samples."""
+    ctr = _regressed_trace(tmp_path, ".ctr")
+    csv = _regressed_trace(tmp_path, ".csv")
+    col_c, col_m = _replay_collector(ctr), _replay_collector(csv)
+    reps_c, reps_m = col_c.run(), col_m.run()
+
+    assert [r.samples for r in reps_c] == [r.samples for r in reps_m]
+    assert _alert_keys(col_c.alerts) == _alert_keys(col_m.alerts)
+    assert any(a.kind == "regression" for a in col_c.alerts)
+    np.testing.assert_allclose([a.factor for a in col_c.alerts],
+                               [a.factor for a in col_m.alerts], atol=1e-9)
+    fc, fm = col_c.rollup.fleet_stats(), col_m.rollup.fleet_stats()
+    np.testing.assert_array_equal(fc.weight, fm.weight)
+    np.testing.assert_allclose(fc.mean, fm.mean, atol=1e-12)
+    np.testing.assert_array_equal(fc.percentiles[50], fm.percentiles[50])
+
+    rd = col_c.streams[0].source.reader
+    total = 4 * 120
+    assert rd.peak_resident_samples < total / 2   # O(chunk), not O(trace)
+
+
+def test_collector_resumes_after_snapshot_restore(tmp_path):
+    """Kill the collector mid-trace, restore from its snapshot() in a
+    fresh Collector, seek a fresh source to the old cursor: the resumed
+    run fires the same alert episodes and converges to the same windowed
+    state as the uninterrupted run."""
+    from repro.fleet.streaming import WindowedRollup
+    from repro.telemetry.source import TraceReplaySource
+
+    ctr = _regressed_trace(tmp_path, ".ctr")
+    straight = _replay_collector(ctr)
+    straight_reports = straight.run()
+
+    first = _replay_collector(ctr)
+    for _ in range(4):                       # die after round 4 (t=1200)
+        first.poll_round()
+    snap = first.snapshot()
+    cursor = first.streams[0].source.cursor_s
+    assert not first.alerts                  # collapse starts at t=1800
+
+    resumed_src = TraceReplaySource(ctr)     # fresh process, same archive
+    resumed_src.seek(cursor)
+    resumed = _replay_collector(
+        ctr, rollup=WindowedRollup.from_bytes(snap),
+        clock_s=first.clock_s, round_idx=first.round_idx)
+    resumed.streams[0].source.seek(cursor)
+    resumed_reports = resumed.run()
+
+    assert resumed_reports[0].round_idx == 5
+    assert [r.samples for r in resumed_reports] \
+        == [r.samples for r in straight_reports[4:]]
+    # the collapse pages once, in the same round, on both runs
+    assert _alert_keys(resumed.alerts) == _alert_keys(straight.alerts)
+    fs, fr = straight.rollup.fleet_stats(), resumed.rollup.fleet_stats()
+    np.testing.assert_array_equal(fs.weight, fr.weight)
+    np.testing.assert_allclose(fs.mean, fr.mean, atol=1e-12)
+    np.testing.assert_array_equal(fs.percentiles[50], fr.percentiles[50])
+    assert straight.rollup.bucket0 == resumed.rollup.bucket0
+
+
+def test_collector_rejects_mismatched_restored_rollup(tmp_path):
+    from repro.fleet.streaming import WindowedRollup
+    ctr = _regressed_trace(tmp_path, ".ctr")
+    with pytest.raises(ValueError, match="does not match config"):
+        _replay_collector(ctr, rollup=WindowedRollup(bucket_s=60,
+                                                     retain=6))

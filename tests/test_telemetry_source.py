@@ -122,6 +122,54 @@ def test_trace_format_validation(tmp_path):
     assert g1.interval_s == 30.0 and g1.times_s[0] == pytest.approx(630.0)
 
 
+def test_read_trace_rejects_malformed_files(tmp_path):
+    """fmt='auto' sniffing must fail LOUD: every malformed-input mode
+    gets a clear error naming the offending line, never a silently
+    mis-parsed grid (regression tests for the former failure modes)."""
+    # headerless CSV: first row is data — skipping it used to drop one
+    # poll per device and shift the inferred t0
+    p = tmp_path / "headerless.csv"
+    p.write_text("30.0,0,0.4,1300.0\n60.0,0,0.41,1310.0\n")
+    with pytest.raises(ValueError, match="no header row"):
+        read_trace(str(p))
+    # header present but a data row is truncated
+    p = tmp_path / "truncated.csv"
+    p.write_text("t_s,device,tpa,clock_mhz\n30.0,0,0.4,1300.0\n60.0,0\n")
+    with pytest.raises(ValueError, match="line 3: truncated row"):
+        read_trace(str(p))
+    # unparseable cell
+    p = tmp_path / "badval.csv"
+    p.write_text("t_s,device,tpa,clock_mhz\n30.0,zero,0.4,1300.0\n")
+    with pytest.raises(ValueError, match="line 2: malformed value"):
+        read_trace(str(p))
+    # invalid JSON line
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"t_s": 30.0, "device": 0, "tpa": 0.4, '
+                 '"clock_mhz": 1300.0}\n{oops\n')
+    with pytest.raises(ValueError, match="line 2: invalid JSON"):
+        read_trace(str(p))
+    # a whole-file JSON array is not JSONL
+    p = tmp_path / "array.json"
+    p.write_text('[{"t_s": 30.0, "device": 0, "tpa": 0.4, '
+                 '"clock_mhz": 1300.0}]\n')
+    with pytest.raises(ValueError, match="not a JSONL trace"):
+        read_trace(str(p))
+    # JSONL record missing a key
+    p = tmp_path / "missing.jsonl"
+    p.write_text('{"t_s": 30.0, "device": 0, "tpa": 0.4}\n')
+    with pytest.raises(ValueError, match=r"missing key\(s\) \['clock_mhz'\]"):
+        read_trace(str(p))
+    # JSONL value of the wrong type
+    p = tmp_path / "badtype.jsonl"
+    p.write_text('{"t_s": 30.0, "device": 0, "tpa": [0.4], '
+                 '"clock_mhz": 1300.0}\n')
+    with pytest.raises(ValueError, match="line 1: malformed value"):
+        read_trace(str(p))
+    # a directory that isn't a columnar archive
+    with pytest.raises(ValueError, match="not a columnar trace archive"):
+        read_trace(str(tmp_path))
+
+
 def test_trace_tolerates_per_device_timestamp_jitter(tmp_path):
     """Real pollers stamp devices a few ms apart; alignment is by poll
     rank, not exact float time equality."""

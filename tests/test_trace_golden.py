@@ -1,0 +1,108 @@
+"""Golden-trace compatibility: the wire formats are frozen by committed
+fixture files, not by convention.
+
+`tests/data/golden.{csv,jsonl,ctr}` were written once from the constants
+below; every future refactor must (a) READ them back to exactly these
+arrays, (b) WRITE byte-identical row traces from the same grid, and
+(c) produce exactly the frozen rollup-bucket readout — so a change that
+silently shifts parsing, serialization precision, or bucketing semantics
+fails here before it corrupts an archive fleet."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.fleet.streaming import StreamingRollup
+from repro.telemetry import TraceReader, read_trace, write_trace
+from repro.telemetry.scrape import DeviceGrid
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+# the exact samples the fixtures hold: awkward floats on purpose
+# (non-terminating binary fractions, repr-precision stress, exact zeros)
+GOLD_TPA = np.array([
+    [0.1, 1.0 / 3.0, 0.4123456789012345, 0.0, 1.0],
+    [0.25, 0.5, 0.75, 0.125, 0.0078125],
+])
+GOLD_CLK = np.array([
+    [1328.5, 1411.0, 1234.56789, 987.654321, 1300.0],
+    [1400.0, 1111.125, 1250.0, 1327.9998779296875, 1399.25],
+])
+GOLD_IV, GOLD_T0 = 30.0, 600.0          # a mid-run slice: t in (600, 750]
+
+# frozen bucket readout: bucket_s=60 over the grid above (buckets 0-9
+# empty — the trace starts at t=600)
+GOLD_BUCKET_WEIGHT = [0.0] * 10 + [4.0, 4.0, 2.0]
+GOLD_BUCKET_MEAN = [float("nan")] * 10 + [
+    0.2514576388888889, 0.2687614532488209, 0.4369772135416667]
+GOLD_BUCKET_P50 = [float("nan")] * 10 + [
+    0.24062500000000003, 0.11171875, 0.00859375]
+
+
+def _gold_grid() -> DeviceGrid:
+    return DeviceGrid(GOLD_IV, GOLD_TPA.copy(), GOLD_CLK.copy(),
+                      t0_s=GOLD_T0)
+
+
+@pytest.mark.parametrize("name", ["golden.csv", "golden.jsonl",
+                                  "golden.ctr"])
+def test_golden_reads_are_exact(name):
+    grid = read_trace(os.path.join(DATA, name))
+    assert grid.interval_s == GOLD_IV
+    assert grid.t0_s == GOLD_T0
+    np.testing.assert_array_equal(grid.tpa, GOLD_TPA)
+    np.testing.assert_array_equal(grid.clock_mhz, GOLD_CLK)
+    np.testing.assert_array_equal(grid.times_s,
+                                  GOLD_T0 + GOLD_IV * np.arange(1, 6))
+
+
+@pytest.mark.parametrize("name", ["golden.csv", "golden.jsonl"])
+def test_golden_row_writes_are_byte_identical(tmp_path, name):
+    """Serialization itself is frozen: re-writing the golden grid must
+    reproduce the committed fixture BYTE for byte."""
+    out = tmp_path / name
+    write_trace(_gold_grid(), str(out))
+    with open(os.path.join(DATA, name), "rb") as fh:
+        want = fh.read()
+    assert out.read_bytes() == want
+
+
+def test_golden_archive_layout_is_frozen():
+    """The columnar manifest (format tag, geometry, chunk index) is part
+    of the wire contract; npz chunk BYTES may vary across numpy/zlib, so
+    the chunk contract is pinned by exact array reads instead."""
+    with open(os.path.join(DATA, "golden.ctr", "manifest.json")) as fh:
+        m = json.load(fh)
+    assert m == {
+        "format": "ctr-v1", "interval_s": 30.0, "n_devices": 2,
+        "t0_s": 600.0, "dtype": "float64", "chunk_samples": 2,
+        "n_samples": 5,
+        "chunks": [
+            {"file": "chunk-000000.npz", "t0_s": 600.0, "n_samples": 2},
+            {"file": "chunk-000001.npz", "t0_s": 660.0, "n_samples": 2},
+            {"file": "chunk-000002.npz", "t0_s": 720.0, "n_samples": 1},
+        ],
+    }
+    rd = TraceReader(os.path.join(DATA, "golden.ctr"))
+    assert [c.n_samples for c in rd.chunks] == [2, 2, 1]
+    for k, grid in enumerate(rd.iter_chunks()):
+        lo = 2 * k
+        np.testing.assert_array_equal(grid.tpa,
+                                      GOLD_TPA[:, lo:lo + 2])
+        np.testing.assert_array_equal(grid.clock_mhz,
+                                      GOLD_CLK[:, lo:lo + 2])
+        assert grid.t0_s == GOLD_T0 + lo * GOLD_IV
+
+
+@pytest.mark.parametrize("name", ["golden.csv", "golden.jsonl",
+                                  "golden.ctr"])
+def test_golden_bucket_readout_is_frozen(name):
+    """Bucketing semantics ride the same golden contract: the fixture
+    through a bucket_s=60 rollup must land these exact buckets."""
+    roll = StreamingRollup(bucket_s=60.0)
+    roll.add_grid("golden", read_trace(os.path.join(DATA, name)))
+    s = roll.job_stats("golden", qs=(50,))
+    np.testing.assert_array_equal(s.weight, GOLD_BUCKET_WEIGHT)
+    np.testing.assert_array_equal(s.mean, GOLD_BUCKET_MEAN)
+    np.testing.assert_array_equal(s.percentiles[50], GOLD_BUCKET_P50)
