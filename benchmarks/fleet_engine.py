@@ -234,6 +234,89 @@ def run() -> list[Row]:
         "chunked_replay_samples_per_s": round(thr_chunk),
         "peak_resident_frac": round(resident_frac, 4),
     }))
+
+    # -- serving layer: store query latency + HTTP requests/s -------------
+    # The 64-job fixture from the collector case, published into a
+    # FleetStore and interrogated the way a dashboard fleet does: a COLD
+    # pass (every query computed — a fresh generation just landed) and a
+    # WARM pass (the common case: pollers repeating queries between
+    # rounds, answered from the generation cache), plus real HTTP
+    # round-trips through the stdlib server (mostly ETag 304s).
+    from repro.serve.client import FleetClient
+    from repro.serve.http import FleetAPIServer
+    from repro.serve.store import FleetStore
+
+    streams = [JobStream(
+        f"mon-{i}",
+        SimulatorSource(PROFILE, duration_s=n_rounds * round_s,
+                        interval_s=INTERVAL_S, n_devices=n_dev_c, seed=i,
+                        events=EVENTS if i % 16 == 0 else ()),
+        chips=256, group="bf16", app_mfu=0.38)
+        for i in range(n_jobs)]
+    col = Collector(streams, CollectorConfig(
+        round_s=round_s, bucket_s=round_s, retain=8))
+    col.run()
+    store = FleetStore()
+    store.update_from(col)
+    job_ids = sorted(col.rollup.jobs)
+
+    def _query_pass():
+        n = 2
+        store.fleet_series()
+        store.alerts()
+        for jid in job_ids:
+            store.job_series(jid)
+            n += 1
+        store.top_regressions(k=5, window=4, min_duration=2)
+        store.goodput()
+        store.divergence()
+        return n + 3
+
+    def _cold_pass():
+        store.update_from(col)          # new generation: cache cleared
+        return _query_pass()
+
+    n_q, us_cold = timed(_cold_pass, repeat=3)
+    _query_pass()                        # prime the generation cache
+    reps = 10
+    def _warm_passes():
+        for _ in range(reps):
+            _query_pass()
+    _, us_warm_total = timed(_warm_passes, repeat=3)
+    us_warm = us_warm_total / reps
+    qps_cold = n_q / (us_cold / 1e6)
+    qps_warm = n_q / (us_warm / 1e6)
+    rows.append(Row("fleet_engine.serve_store_cold_64job", us_cold,
+                    f"queries_per_s={qps_cold:.0f} queries={n_q}"))
+    rows.append(Row("fleet_engine.serve_store_warm_64job", us_warm,
+                    f"queries_per_s={qps_warm:.0f} cached=1"))
+
+    with FleetAPIServer(store) as server:
+        client = FleetClient(server.url)
+        client.fleet()                   # prime the client ETag cache
+        n_http = 100
+
+        def _http_pass():
+            for k in range(n_http):
+                if k % 4 == 0:
+                    client.job(job_ids[k % len(job_ids)])
+                else:
+                    client.fleet()       # repeat poll -> 304
+
+        _, us_http = timed(_http_pass, repeat=3)
+    rps_http = n_http / (us_http / 1e6)
+    rows.append(Row("fleet_engine.serve_http_64job", us_http / n_http,
+                    f"requests_per_s={rps_http:.0f} "
+                    f"hits_304={client.hits_304}"))
+    print("BENCH " + json.dumps({
+        "name": "serve_query",
+        "jobs": n_jobs,
+        "store_queries_per_s_cold": round(qps_cold),
+        "store_queries_per_s": round(qps_warm),
+        "http_requests_per_s": round(rps_http),
+        "http_304_frac": round(client.hits_304 / max(client.requests, 1),
+                               3),
+    }))
     return rows
 
 

@@ -13,7 +13,12 @@
 7. a continuous Collector daemon polls a SimulatorSource AND a
    TraceReplaySource round after round into a windowed rollup, retimes
    scrape intervals adaptively, and prints rolling regression alerts —
-   the paper's live-dashboard deployment instead of batch ingestion.
+   the paper's live-dashboard deployment instead of batch ingestion;
+8. the serving layer puts an HTTP dashboard API in front of it: a
+   ServiceDaemon paces the collector on a (simulated) wall clock,
+   publishing every round into a FleetStore, and a FleetClient queries
+   fleet series / top regressions / alerts over stdlib HTTP — repeat
+   polls ride generation ETags as 304s.
 
   PYTHONPATH=src python examples/fleet_monitoring.py
 """
@@ -229,6 +234,51 @@ def main():
               f"{at['mean'] * 100:.1f}%")
     finally:
         os.unlink(replay_path)
+
+    print("\n== serving the fleet (daemon + HTTP dashboard API) ==")
+    # the same continuous loop, deployed: a ServiceDaemon paces rounds on
+    # the wall clock (simulated here, so the example finishes instantly)
+    # and publishes each one into a FleetStore; dashboards poll a
+    # stdlib-only JSON API whose ETags make unchanged polls free (304)
+    from repro.serve import (FleetAPIServer, FleetClient, ServiceDaemon,
+                             SimClock)
+    streams = [
+        JobStream("served-healthy",
+                  SimulatorSource(prof, duration_s=2400, interval_s=30,
+                                  n_devices=8, seed=31), chips=256),
+        JobStream("served-regressing",
+                  SimulatorSource(prof, duration_s=2400, interval_s=30,
+                                  n_devices=8, seed=32,
+                                  events=[Event(1200, 2400,
+                                                slowdown=2.5)]),
+                  chips=512),
+    ]
+    clk = SimClock()
+    daemon = ServiceDaemon(
+        Collector(streams,
+                  CollectorConfig(round_s=300, bucket_s=300, retain=8,
+                                  detector={"window": 3,
+                                            "min_duration": 1})),
+        clock=clk.monotonic, sleep=clk.sleep)
+    with daemon, FleetAPIServer(daemon.store) as server:
+        daemon.run()
+        client = FleetClient(server.url)
+        fleet = client.fleet()
+        print(f"  GET {server.url}/v1/fleet -> generation "
+              f"{fleet['generation']}, weighted OFU "
+              f"{fleet['weighted_ofu'] * 100:.1f}%")
+        worst = client.top_regressions(k=3, window=3, min_duration=1)
+        for reg in worst["regressions"]:
+            print(f"  top regression: {reg['job_id']} "
+                  f"factor {reg['factor']:.2f}x "
+                  f"(bucket {reg['start_bucket']}, "
+                  f"{'ongoing' if reg['ongoing'] else 'recovered'})")
+        alerts = client.alerts()
+        print(f"  /v1/alerts: {alerts['total']} fired, "
+              f"open episodes {alerts['active_episodes']}")
+        client.fleet()
+        print(f"  repeat poll: {client.hits_304} x 304 via ETag "
+              f"(store cache hits={daemon.store.cache_hits})")
 
 
 if __name__ == "__main__":

@@ -74,6 +74,7 @@ class AdaptiveConfig:
     spike_ratio: float = 2.0     # round std vs EMA baseline => spike
     quiet_rounds: int = 3        # consecutive calm rounds before relaxing
     ema: float = 0.2             # baseline update rate
+    episode_aware: bool = True   # pin a job hot while an alert is open
 
     def __post_init__(self):
         if not 0 < self.min_interval_s <= self.max_interval_s:
@@ -95,6 +96,14 @@ class AdaptiveScrapeController:
     at max_interval_s) after `quiet_rounds` consecutive calm rounds, and
     unchanged otherwise.  Every returned interval passes
     `check_scrape_interval` by construction of the bounds.
+
+    DETECTOR-AWARE scheduling: `episode_open=True` (the collector passes
+    it while the job has an open regression/divergence alert episode)
+    overrides the dispersion signal — the interval tightens toward
+    min_interval_s and HOLDS there for as long as the episode stays open,
+    because an active incident wants maximum temporal resolution even
+    when the regressed level itself is quiet.  Once the episode clears,
+    the normal quiet-rounds relaxation takes the interval back up.
     """
 
     def __init__(self, cfg: Optional[AdaptiveConfig] = None):
@@ -103,9 +112,26 @@ class AdaptiveScrapeController:
         self._quiet: dict = {}       # job_id -> consecutive calm rounds
 
     def update(self, job_id: str, ofu_samples: np.ndarray,
-               interval_s: float) -> float:
+               interval_s: float, *, episode_open: bool = False) -> float:
         cfg = self.cfg
         samples = np.asarray(ofu_samples, float).ravel()
+        if episode_open and cfg.episode_aware:
+            # an open alert episode pins the job hot: step toward the
+            # floor and never bank quiet rounds while the incident lasts
+            # (the dispersion branch below handles pre-detection spikes)
+            self._quiet[job_id] = 0
+            if samples.size >= 2:
+                std = float(np.std(samples))
+                base = self._baseline.get(job_id)
+                # absorb the episode's dispersion so post-clear rounds
+                # compare against the regime they actually live in
+                self._baseline[job_id] = std if base is None \
+                    else (1 - cfg.ema) * base + cfg.ema * std
+            new = min(cfg.max_interval_s,
+                      max(cfg.min_interval_s, interval_s * cfg.tighten))
+            if new != interval_s:
+                check_scrape_interval(new)
+            return new
         if samples.size < 2:
             return interval_s
         std = float(np.std(samples))
@@ -215,6 +241,12 @@ class AlertDeduper:
     def active(self) -> list:
         return sorted(self._active, key=repr)
 
+    @property
+    def active_jobs(self) -> set:
+        """Jobs with at least one open episode of any kind — what the
+        detector-aware adaptive scheduler keys its tighten/hold on."""
+        return {key[0] for key in self._active}
+
 
 # ---------------------------------------------------------------------------
 # The collector daemon
@@ -290,7 +322,8 @@ class Collector:
     def __init__(self, streams: Sequence[JobStream],
                  config: Optional[CollectorConfig] = None, *,
                  rollup: Optional[WindowedRollup] = None,
-                 clock_s: float = 0.0, round_idx: int = 0):
+                 clock_s: float = 0.0, round_idx: int = 0,
+                 on_grid=None):
         """`rollup`/`clock_s`/`round_idx` restore a collector from a
         `snapshot()` across a process restart: pass
         `WindowedRollup.from_bytes(snap)` plus the old collector's clock
@@ -298,7 +331,12 @@ class Collector:
         predecessor's cursor stood — polling resumes mid-trace with the
         retained window intact (alert-episode hysteresis state is NOT
         part of the snapshot; an episode still open across the restart
-        re-fires once)."""
+        re-fires once).
+
+        `on_grid(stream, grid)` is the per-poll round hook: called with
+        every non-empty polled DeviceGrid BEFORE rollup ingestion — the
+        recording-mode tee point (`repro.serve.ServiceDaemon` routes
+        grids into per-job `TraceWriter`s through it)."""
         self.streams = list(streams)
         ids = [st.job_id for st in self.streams]
         if len(set(ids)) != len(ids):
@@ -326,10 +364,32 @@ class Collector:
         self.round_idx = int(round_idx)
         self.clock_s = float(clock_s)
         self.alerts: list = []       # every alert ever fired, in order
+        self.on_grid = on_grid
 
     @property
     def done(self) -> bool:
         return all(st.source.exhausted for st in self.streams)
+
+    # -- stream churn (a long-lived daemon's jobs come and go) ----------
+    def add_stream(self, stream: JobStream) -> None:
+        """Attach a stream mid-run; it joins the NEXT poll round.  Its
+        grids carry their own absolute t0_s, so a late joiner lands in
+        the right buckets (samples older than the retention horizon fold
+        into the all-time totals, exactly as batch ingestion would)."""
+        if any(st.job_id == stream.job_id for st in self.streams):
+            raise ValueError(f"duplicate job_id {stream.job_id!r}")
+        self.streams.append(stream)
+
+    def remove_stream(self, job_id: str) -> JobStream:
+        """Detach a stream and return it.  Already-ingested buckets stay
+        in the rollup (history is history); the regression sweep stops
+        scanning the job next round, and any open alert episode retires
+        after `clear_rounds` quiet rounds like a recovery would."""
+        for k, st in enumerate(self.streams):
+            if st.job_id == job_id:
+                return self.streams.pop(k)
+        raise KeyError(f"no stream with job_id {job_id!r} "
+                       f"(have {[s.job_id for s in self.streams]})")
 
     def snapshot(self) -> bytes:
         """The windowed rollup's wire-format state (kilobytes)."""
@@ -339,6 +399,9 @@ class Collector:
     def _collect(self) -> int:
         cfg = self.config
         n_samples = 0
+        # last round's open episodes drive detector-aware retiming (the
+        # detectors for THIS round haven't run yet when we poll)
+        hot = self.deduper.active_jobs if self.controller else ()
         for st in self.streams:
             src = st.source
             if src.exhausted:
@@ -346,6 +409,8 @@ class Collector:
             grid = src.poll(cfg.round_s)
             if grid.tpa.size == 0:
                 continue
+            if self.on_grid is not None:
+                self.on_grid(st, grid)
             ofu = self.rollup.add_grid(
                 st.job_id, grid, chip=st.chip, group=st.group,
                 chips=st.chips, app_mfu=st.app_mfu, arch=st.arch,
@@ -353,7 +418,8 @@ class Collector:
             n_samples += grid.tpa.size
             if self.controller is not None and src.retimable:
                 new = self.controller.update(st.job_id, ofu,
-                                             src.interval_s)
+                                             src.interval_s,
+                                             episode_open=st.job_id in hot)
                 if new != src.interval_s:
                     src.set_interval(new)
         return n_samples

@@ -34,6 +34,14 @@ def precision_label(precisions: dict) -> str:
         or "unknown"
 
 
+def weighted_mean(stats: "BucketStats") -> float:
+    """Weight-weighted mean OFU over a readout (0.0 when empty) — the one
+    scalar a dashboard headline shows; shared by `summary()`,
+    `to_job_points`, and the serving layer's goodput rollup."""
+    w = float(np.nansum(stats.weight))
+    return float(np.nansum(stats.mean * stats.weight) / max(w, 1e-12))
+
+
 @dataclass
 class BucketStats:
     """One scope's readout: aligned per-bucket arrays."""
@@ -49,6 +57,22 @@ class BucketStats:
     @property
     def centers_s(self) -> np.ndarray:
         return self.t0_s + (np.arange(len(self.mean)) + 0.5) * self.bucket_s
+
+    def payload(self) -> dict:
+        """JSON-ready readout (arrays → lists, NaN → null): the wire shape
+        the serving layer (`repro.serve`) returns for time-series queries."""
+        return {"bucket_s": self.bucket_s, "t0_s": self.t0_s,
+                "t_s": _json_list(self.centers_s),
+                "mean": _json_list(self.mean),
+                "weight": _json_list(self.weight),
+                "percentiles": {f"{q:g}": _json_list(v)
+                                for q, v in self.percentiles.items()}}
+
+
+def _json_list(a) -> list:
+    """Array → JSON-safe list (NaN/inf become null, not bare tokens)."""
+    return [float(x) if np.isfinite(x) else None
+            for x in np.asarray(a, float).ravel()]
 
 
 class StreamingRollup:
@@ -270,6 +294,13 @@ class StreamingRollup:
         return [k[1] for k in self._hists
                 if k[0] == "group" and k[1] != _FLEET]
 
+    def job_meta(self, job_id: str):
+        """Copy of the metadata registered for a job at ingest (chips /
+        app_mfu / arch / flops_variant), or None if the job never reported
+        an app MFU — what the serving layer attaches to job queries."""
+        m = self._job_meta.get(job_id)
+        return dict(m) if m is not None else None
+
     def job_ofu(self, job_id: str, *, fill: bool = True) -> np.ndarray:
         """Per-bucket mean OFU series — detector-ready input for
         `regression.detect_regressions`.  fill=True forward-fills empty
@@ -294,17 +325,14 @@ class StreamingRollup:
             m = self._job_meta.get(jid)
             if m is None:
                 continue
-            s = self.job_stats(jid, qs=())
-            ofu = float(np.nansum(s.mean * s.weight)
-                        / max(np.nansum(s.weight), 1e-12))
+            ofu = weighted_mean(self.job_stats(jid, qs=()))
             out.append(JobPoint(jid, m["arch"], m["chips"], m["app_mfu"],
                                 ofu, m["flops_variant"]))
         return out
 
     def summary(self) -> str:
         f = self.fleet_stats()
-        w = np.nansum(f.weight)
-        mean = float(np.nansum(f.mean * f.weight) / max(w, 1e-12))
+        mean = weighted_mean(f)
         last = f.percentiles.get(50, np.array([np.nan]))[-1] \
             if self.n_buckets else float("nan")
         return (f"fleet_rollup buckets={self.n_buckets} "

@@ -1,0 +1,12 @@
+"""Serving layer: the read/query side of the fleet pipeline.
+
+`FleetStore` indexes collector state into cacheable, generation-
+versioned query answers; `ServiceDaemon` runs a collector on a real
+wall clock (pacing, stream churn, snapshot persistence, recording tee);
+`FleetAPIServer`/`FleetClient` put a stdlib-only JSON dashboard API in
+front of it.  See docs/ARCHITECTURE.md § "The serving layer".
+"""
+from repro.serve.client import FleetAPIError, FleetClient  # noqa: F401
+from repro.serve.daemon import ServiceDaemon, SimClock  # noqa: F401
+from repro.serve.http import ApiError, FleetAPIServer  # noqa: F401
+from repro.serve.store import FleetStore, alert_payload  # noqa: F401

@@ -1,0 +1,101 @@
+"""Thin Python client for the fleet dashboard API (`repro.serve.http`).
+
+Stdlib `urllib` only.  The client keeps a per-URL (ETag, payload) cache
+and sends `If-None-Match` on every repeat request: when the store
+generation hasn't moved, the server answers 304 with no body and the
+client returns its cached payload — the polling pattern every dashboard
+widget uses, measured by `hits_304`.
+
+    client = FleetClient(server.url)
+    fleet = client.fleet()                    # GET /v1/fleet
+    job = client.job("prod-llm-7b")           # GET /v1/jobs/prod-llm-7b
+    worst = client.top_regressions(k=3)       # GET /v1/query?kind=...
+    again = client.fleet()                    # 304 -> cached payload
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional, Sequence
+from urllib.error import HTTPError, URLError
+from urllib.parse import quote, urlencode
+from urllib.request import Request, urlopen
+
+
+class FleetAPIError(RuntimeError):
+    """A non-2xx API answer (carries the HTTP status)."""
+
+    def __init__(self, status: int, message: str):
+        super().__init__(f"HTTP {status}: {message}")
+        self.status = int(status)
+
+
+class FleetClient:
+    """ETag-caching client over one server's base URL."""
+
+    def __init__(self, base_url: str, *, timeout_s: float = 10.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout_s = float(timeout_s)
+        self._cache: dict = {}        # url -> (etag, payload)
+        self.requests = 0
+        self.hits_304 = 0
+
+    def _get(self, path: str, params: Optional[dict] = None) -> dict:
+        url = self.base_url + path
+        if params:
+            url += "?" + urlencode({k: v for k, v in params.items()
+                                    if v is not None})
+        req = Request(url, headers={"Accept": "application/json"})
+        cached = self._cache.get(url)
+        if cached is not None:
+            req.add_header("If-None-Match", cached[0])
+        self.requests += 1
+        try:
+            with urlopen(req, timeout=self.timeout_s) as resp:
+                etag = resp.headers.get("ETag")
+                payload = json.loads(resp.read().decode())
+        except HTTPError as e:
+            if e.code == 304 and cached is not None:
+                self.hits_304 += 1
+                return cached[1]
+            try:
+                msg = json.loads(e.read().decode()).get("error", e.reason)
+            except Exception:          # noqa: BLE001 — error body optional
+                msg = str(e.reason)
+            raise FleetAPIError(e.code, msg) from None
+        except URLError as e:
+            raise FleetAPIError(0, f"cannot reach {url}: {e.reason}") \
+                from None
+        if etag is not None:
+            self._cache[url] = (etag, payload)
+        return payload
+
+    @staticmethod
+    def _qs(qs: Optional[Sequence]) -> Optional[str]:
+        return None if qs is None else ",".join(f"{q:g}" for q in qs)
+
+    # -- endpoints ------------------------------------------------------
+    def fleet(self, qs: Optional[Sequence] = None) -> dict:
+        return self._get("/v1/fleet", {"qs": self._qs(qs)})
+
+    def jobs(self) -> dict:
+        return self._get("/v1/jobs")
+
+    def job(self, job_id: str, qs: Optional[Sequence] = None) -> dict:
+        return self._get(f"/v1/jobs/{quote(job_id, safe='')}",
+                         {"qs": self._qs(qs)})
+
+    def alerts(self, limit: Optional[int] = None) -> dict:
+        return self._get("/v1/alerts", {"limit": limit})
+
+    def query(self, kind: str, **params) -> dict:
+        return self._get("/v1/query", {"kind": kind, **params})
+
+    # -- conveniences over /v1/query ------------------------------------
+    def top_regressions(self, k: int = 5, **detector_kw) -> dict:
+        return self.query("top_regressions", k=k, **detector_kw)
+
+    def goodput(self, healthy_ofu: Optional[float] = None) -> dict:
+        return self.query("goodput", healthy_ofu=healthy_ofu)
+
+    def divergence(self, flag_rel_err: Optional[float] = None) -> dict:
+        return self.query("divergence", flag_rel_err=flag_rel_err)

@@ -256,6 +256,26 @@ class TraceWriter:
             fh.write("\n")
         os.replace(tmp, os.path.join(self.path, MANIFEST_NAME))
 
+    def flush(self, *, partial: bool = False) -> None:
+        """Flush buffered samples and rewrite the manifest, keeping the
+        writer open.
+
+        With `partial=False` only full chunks are written (what `append`
+        already does opportunistically) — this just forces the manifest
+        rewrite.  `partial=True` also writes the buffered tail as a short
+        chunk: the crash-safety point for a recording daemon.  After
+        `flush(partial=True)` a kill loses NOTHING already appended — the
+        on-disk archive replays through `TraceReplaySource` up to the
+        flush, and later appends simply continue in new chunks (chunk
+        sizes may vary; readers only require contiguity).
+        """
+        if self._closed:
+            raise ValueError("TraceWriter is closed")
+        if self._buffered:
+            self._drain(final=partial)
+        else:
+            self._write_manifest()
+
     def close(self) -> None:
         if self._closed:
             return

@@ -211,12 +211,37 @@ def test_collector_adaptive_retimes_source_on_event_boundary():
         PROFILE, duration_s=4800, interval_s=30, n_devices=4, seed=2,
         events=[Event(2550, 4800, slowdown=2.5)]))]
     cfg = CollectorConfig(round_s=300, bucket_s=300, retain=8,
-                          adaptive=AdaptiveConfig(min_interval_s=5.0))
+                          adaptive=AdaptiveConfig(min_interval_s=5.0,
+                                                  episode_aware=False))
     col = Collector(streams, cfg)
     reports = col.run()
     ivs = [r.intervals["reg"] for r in reports]
     assert min(ivs) < 30.0          # tightened on the dispersion spike
     assert ivs[-1] == 30.0          # relaxed once the new level is quiet
+    assert all(5.0 <= i <= MAX_HW_AVG_WINDOW_S for i in ivs)
+
+
+def test_collector_episode_aware_holds_interval_while_alert_open():
+    # same collapse, episode-aware (the default): once the regression
+    # episode opens, the interval pins to the floor and HOLDS until the
+    # run ends (the collapse never recovers), instead of relaxing the
+    # moment the regressed level goes quiet
+    streams = [JobStream("reg", SimulatorSource(
+        PROFILE, duration_s=4800, interval_s=30, n_devices=4, seed=2,
+        events=[Event(2550, 4800, slowdown=2.5)]))]
+    cfg = CollectorConfig(round_s=300, bucket_s=300, retain=8,
+                          detector={"window": 3, "min_duration": 1},
+                          adaptive=AdaptiveConfig(min_interval_s=5.0))
+    col = Collector(streams, cfg)
+    reports = col.run()
+    ivs = [r.intervals["reg"] for r in reports]
+    first_alert = next(r.round_idx for r in reports if r.alerts)
+    assert "reg" in col.deduper.active_jobs       # still open at the end
+    assert ivs[-1] == 5.0                         # pinned hot
+    # every round after the episode opened ran at/below the pre-episode
+    # cadence, stepping down to the floor and never relaxing
+    tail = ivs[first_alert:]
+    assert all(b <= a for a, b in zip(tail, tail[1:]))
     assert all(5.0 <= i <= MAX_HW_AVG_WINDOW_S for i in ivs)
 
 
@@ -332,6 +357,50 @@ def test_adaptive_rebaselines_after_sustained_regime_change():
         ivs.append(iv)
     assert min(ivs) == 5.0          # reacted hard to the shift
     assert ivs[-1] == 30.0          # absorbed the new regime, relaxed back
+
+
+def test_adaptive_episode_driven_tighten_hold_relax_cycle():
+    # the detector-aware satellite, at the controller level: an OPEN
+    # episode tightens to the floor and holds even though dispersion is
+    # perfectly calm; CLEARing re-enters the normal quiet-rounds relax
+    cfg = AdaptiveConfig(min_interval_s=5.0, max_interval_s=30.0,
+                         quiet_rounds=2)
+    ctl = AdaptiveScrapeController(cfg)
+    rng = np.random.default_rng(0)
+    quiet = lambda: 0.4 + rng.normal(0, 0.003, 64)         # noqa: E731
+    iv = ctl.update("j", quiet(), 30.0)                    # baseline
+    assert iv == 30.0
+    for want in (15.0, 7.5, 5.0, 5.0, 5.0):                # open episode
+        iv = ctl.update("j", quiet(), iv, episode_open=True)
+        assert iv == want                                  # tighten, hold
+        check_ok = cfg.min_interval_s <= iv <= cfg.max_interval_s
+        assert check_ok
+    history = [iv]
+    for _ in range(8):                                     # episode clear
+        iv = ctl.update("j", quiet(), iv, episode_open=False)
+        history.append(iv)
+    assert history[-1] == 30.0                             # relaxed back
+    # relaxation steps the quiet_rounds ladder: 5 -> 10 -> 20 -> 30
+    from itertools import groupby
+    assert [k for k, _ in groupby(history)] == [5.0, 10.0, 20.0, 30.0]
+    # an episode mid-relax re-pins immediately
+    iv = ctl.update("j", quiet(), 30.0, episode_open=True)
+    assert iv == 15.0
+    # episode_aware=False ignores the episode signal entirely
+    off = AdaptiveScrapeController(AdaptiveConfig(episode_aware=False))
+    off.update("k", quiet(), 30.0)
+    assert off.update("k", quiet(), 30.0, episode_open=True) == 30.0
+
+
+def test_deduper_active_jobs_tracks_open_episodes():
+    d = AlertDeduper(clear_rounds=1)
+    assert d.active_jobs == set()
+    d.offer(("a", "regression"))
+    d.offer(("b", "divergence"))
+    d.tick()                       # end of the round that saw them
+    assert d.active_jobs == {"a", "b"}
+    d.tick()                       # clear_rounds=1: both retire unseen
+    assert d.active_jobs == set()
 
 
 def test_adaptive_tighten_clamps_degraded_interval_into_policy():

@@ -1,0 +1,385 @@
+"""ServiceDaemon lifecycle coverage (ISSUE 5): wall-clock pacing with
+drift correction on an injected clock, graceful mid-run stream churn
+(bucketwise-consistent rollups), snapshot persist → restart restore →
+continue equivalence through the FleetStore, and the crash-safe
+recording tee (a killed daemon leaves replayable archives up to the
+last persistence point; a restored one continues them gaplessly).
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.fleet.collector import Collector, CollectorConfig, JobStream
+from repro.fleet.engine import simulate_devices
+from repro.fleet.streaming import WindowedRollup
+from repro.serve.daemon import ServiceDaemon, SimClock
+from repro.telemetry import (Event, SimulatorSource, StepProfile,
+                             TraceReplaySource, write_trace)
+from repro.telemetry.source import read_trace
+
+PROFILE = StepProfile(mxu_time_s=0.84, step_time_s=2.0)
+
+
+def _sim_stream(job_id, duration_s=1800, seed=0, **kw):
+    return JobStream(job_id, SimulatorSource(
+        PROFILE, duration_s=duration_s, interval_s=30, n_devices=2,
+        seed=seed), chips=32, group="bf16", **kw)
+
+
+def _cfg(**kw):
+    kw.setdefault("round_s", 300)
+    kw.setdefault("bucket_s", 300)
+    kw.setdefault("retain", 8)
+    kw.setdefault("detector", {"window": 3, "min_duration": 1})
+    return CollectorConfig(**kw)
+
+
+def _archive(tmp_path, name="trace.ctr", duration_s=3600,
+             chunk_samples=40, seed=21):
+    grid = simulate_devices(PROFILE, duration_s=duration_s,
+                            interval_s=30.0,
+                            events=[Event(duration_s / 2, duration_s,
+                                          slowdown=2.5)],
+                            n_devices=4, seed=seed)
+    path = str(tmp_path / name)
+    write_trace(grid, path, chunk_samples=chunk_samples)
+    return path, grid
+
+
+def _replay_streams(path):
+    return [JobStream("traced", TraceReplaySource(path), chips=128,
+                      group="bf16", app_mfu=0.38)]
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock pacing
+# ---------------------------------------------------------------------------
+class _SlowRoundCollector(Collector):
+    """Collector whose rounds 'take' fixed wall time on a SimClock."""
+
+    def __init__(self, *args, clk=None, costs=(), **kw):
+        super().__init__(*args, **kw)
+        self._clk = clk
+        self._costs = list(costs)
+
+    def poll_round(self):
+        if self._costs:
+            self._clk.advance(self._costs.pop(0))
+        return super().poll_round()
+
+
+def test_daemon_sleeps_to_deadline_with_drift_correction():
+    clk = SimClock()
+    col = _SlowRoundCollector([_sim_stream("j", duration_s=1500)], _cfg(),
+                              clk=clk, costs=[40.0] * 5)
+    daemon = ServiceDaemon(col, clock=clk.monotonic, sleep=clk.sleep)
+    reports = daemon.run()
+    assert len(reports) == 5
+    # each round costs 40 s; deadlines are origin + k*300, so every sleep
+    # is exactly the 260 s of slack — drift never accumulates
+    assert clk.sleeps == pytest.approx([260.0] * 4)   # no sleep after last
+    assert daemon.overruns == 0
+
+
+def test_daemon_overrun_skips_sleep_and_does_not_shift_later_deadlines():
+    clk = SimClock()
+    col = _SlowRoundCollector([_sim_stream("j", duration_s=1500)], _cfg(),
+                              clk=clk, costs=[40.0, 350.0, 40.0, 40.0, 40.0])
+    daemon = ServiceDaemon(col, clock=clk.monotonic, sleep=clk.sleep)
+    daemon.run()
+    assert daemon.overruns == 1
+    # round 2 blows its 600 s deadline (ends at 650); round 3 ends at 690
+    # and sleeps only the 210 s back to the ORIGIN-anchored 900 s deadline
+    assert clk.sleeps == pytest.approx([260.0, 210.0, 260.0])
+
+
+def test_daemon_unpaced_run_never_sleeps():
+    clk = SimClock()
+    daemon = ServiceDaemon(
+        Collector([_sim_stream("j", duration_s=1200)], _cfg()),
+        clock=clk.monotonic, sleep=clk.sleep, pace=False)
+    daemon.run()
+    assert clk.sleeps == []
+
+
+def test_daemon_requires_bounded_streams_without_n_rounds():
+    live = _sim_stream("live", duration_s=float("inf"))
+    clk = SimClock()
+    daemon = ServiceDaemon(Collector([live], _cfg()),
+                           clock=clk.monotonic, sleep=clk.sleep)
+    with pytest.raises(ValueError, match="unbounded"):
+        daemon.run()
+    assert len(daemon.run(n_rounds=2)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Stream churn
+# ---------------------------------------------------------------------------
+class _RecordingSource(SimulatorSource):
+    def poll(self, duration_s):
+        grid = super().poll(duration_s)
+        self.__dict__.setdefault("polled", []).append(grid)
+        return grid
+
+
+def test_stream_churn_keeps_rollup_bucketwise_consistent():
+    a = JobStream("a", _RecordingSource(PROFILE, duration_s=2400,
+                                        interval_s=30, n_devices=2,
+                                        seed=1), chips=32, group="bf16")
+    b = JobStream("b", _RecordingSource(PROFILE, duration_s=2400,
+                                        interval_s=30, n_devices=2,
+                                        seed=2), chips=32, group="bf16")
+    c = JobStream("c", _RecordingSource(PROFILE, duration_s=1200,
+                                        interval_s=30, n_devices=2,
+                                        seed=3), chips=32, group="bf16")
+    clk = SimClock()
+    daemon = ServiceDaemon(Collector([a, b], _cfg()),
+                           clock=clk.monotonic, sleep=clk.sleep)
+    daemon.run(n_rounds=2)
+    daemon.request_add_stream(c)          # joins at round 3
+    daemon.run(n_rounds=2)
+    daemon.request_remove_stream("b")     # leaves before round 5
+    daemon.run()
+    assert daemon.done
+
+    # manual reference: ingest exactly the grids the daemon polled
+    ref = WindowedRollup(bucket_s=300, retain=8)
+    for st in (a, b, c):
+        for grid in st.source.polled:
+            ref.add_grid(st.job_id, grid, group="bf16", chips=32)
+    roll = daemon.collector.rollup
+    assert roll.bucket0 == ref.bucket0
+    assert sorted(roll.jobs) == ["a", "b", "c"]
+    for jid in ("a", "b", "c"):
+        np.testing.assert_array_equal(roll.job_ofu(jid), ref.job_ofu(jid))
+    np.testing.assert_array_equal(roll.fleet_stats().mean,
+                                  ref.fleet_stats().mean)
+    # b stopped polling when removed: 4 rounds of samples, not 8
+    assert len(b.source.polled) == 4
+    # the published store saw the c join
+    assert daemon.store.jobs()["jobs"] == ["a", "b", "c"]
+
+
+def test_duplicate_add_and_unknown_remove_fail_loudly():
+    col = Collector([_sim_stream("a")], _cfg())
+    with pytest.raises(ValueError, match="duplicate"):
+        col.add_stream(_sim_stream("a", seed=9))
+    with pytest.raises(KeyError, match="nope"):
+        col.remove_stream("nope")
+
+
+# ---------------------------------------------------------------------------
+# Persistence + restore
+# ---------------------------------------------------------------------------
+def test_persist_restore_continue_matches_uninterrupted_run(tmp_path):
+    path, _ = _archive(tmp_path)
+    clk = SimClock()
+    straight = ServiceDaemon(Collector(_replay_streams(path), _cfg()),
+                             clock=clk.monotonic, sleep=clk.sleep)
+    straight.run()
+
+    state = str(tmp_path / "state")
+    clk = SimClock()
+    first = ServiceDaemon(Collector(_replay_streams(path), _cfg()),
+                          state_dir=state, persist_every=2,
+                          clock=clk.monotonic, sleep=clk.sleep)
+    first.run(n_rounds=5)
+    # "kill -9": no close(); the persist at round 4 is the restart point
+    resumed = ServiceDaemon.restore(state, _replay_streams(path), _cfg(),
+                                    clock=clk.monotonic, sleep=clk.sleep)
+    assert resumed.collector.round_idx == 4
+    assert resumed.collector.streams[0].source.cursor_s == 1200.0
+    resumed.run()
+    resumed.close()
+
+    # every FleetStore answer matches the uninterrupted run
+    for query in ("fleet_series", "top_regressions", "goodput"):
+        a = getattr(straight.store, query)()
+        b = getattr(resumed.store, query)()
+        for key in set(a) - {"generation", "round_idx", "clock_s"}:
+            assert a[key] == b[key], (query, key)
+    ja = straight.store.job_series("traced")
+    jb = resumed.store.job_series("traced")
+    assert ja["mean"] == jb["mean"] and ja["percentiles"] \
+        == jb["percentiles"]
+    # alert EPISODES agree (an episode open across the restart re-fires,
+    # so round indices may differ — the paged incidents must not)
+    assert {(a["job_id"], a["kind"])
+            for a in straight.store.alerts()["alerts"]} \
+        == {(a["job_id"], a["kind"])
+            for a in resumed.store.alerts()["alerts"]}
+
+
+def test_restore_rejects_missing_state_and_unseekable_sources(tmp_path):
+    with pytest.raises(ValueError, match="no daemon state"):
+        ServiceDaemon.restore(str(tmp_path / "empty"), [], _cfg())
+    path, _ = _archive(tmp_path)
+    state = str(tmp_path / "state")
+    clk = SimClock()
+    daemon = ServiceDaemon(Collector(_replay_streams(path), _cfg()),
+                           state_dir=state, persist_every=1,
+                           clock=clk.monotonic, sleep=clk.sleep)
+    daemon.run(n_rounds=2)
+    daemon.close()
+    with pytest.raises(ValueError, match="cannot seek"):
+        ServiceDaemon.restore(state, [_sim_stream("traced")], _cfg())
+
+
+def test_fleet_collector_daemon_serves_but_rejects_persist_and_tee(tmp_path):
+    from repro.fleet.collector import FleetCollector
+
+    def host(jid, seed):
+        return Collector([_sim_stream(jid, seed=seed, duration_s=1200)],
+                         _cfg())
+
+    fc = FleetCollector([host("a", 1), host("b", 2)], reduce_every=1)
+    with pytest.raises(ValueError, match="plain Collector"):
+        ServiceDaemon(fc, state_dir=str(tmp_path), persist_every=1)
+    clk = SimClock()
+    daemon = ServiceDaemon(FleetCollector([host("a", 1), host("b", 2)],
+                                          reduce_every=1),
+                           clock=clk.monotonic, sleep=clk.sleep)
+    with pytest.raises(ValueError, match="plain Collector"):
+        daemon.request_add_stream(_sim_stream("c"))
+    daemon.run()
+    assert daemon.store.jobs()["jobs"] == ["a", "b"]
+    assert clk.sleeps          # fleet daemon paces too
+
+
+# ---------------------------------------------------------------------------
+# Recording tee (the ROADMAP recording-Collector mode), crash-safe
+# ---------------------------------------------------------------------------
+def test_tee_records_exact_replayable_archives(tmp_path):
+    path, grid = _archive(tmp_path)
+    tee = str(tmp_path / "tee")
+    clk = SimClock()
+    daemon = ServiceDaemon(Collector(_replay_streams(path), _cfg()),
+                           tee_dir=tee, tee_chunk_samples=32,
+                           clock=clk.monotonic, sleep=clk.sleep)
+    daemon.run()
+    daemon.close()
+    back = read_trace(os.path.join(tee, "traced.ctr"))
+    np.testing.assert_array_equal(back.tpa,
+                                  grid.tpa.astype(back.tpa.dtype))
+    np.testing.assert_array_equal(back.clock_mhz,
+                                  grid.clock_mhz.astype(back.tpa.dtype))
+    assert back.t0_s == 0.0 and back.interval_s == 30.0
+
+
+def test_killed_tee_leaves_replayable_archive_and_restore_completes_it(
+        tmp_path):
+    """The satellite case: kill the daemon mid-run.  The archive must be
+    valid and replayable up to the last persistence point, and a
+    restored daemon must continue it into the full exact trace (skipping
+    whatever a mid-flight chunk flush already archived)."""
+    path, grid = _archive(tmp_path)
+    state, tee = str(tmp_path / "state"), str(tmp_path / "tee")
+    clk = SimClock()
+    # chunk_samples=10 == one round of samples: round 5's append flushes
+    # a chunk on its own, putting the archive AHEAD of the persisted
+    # round-4 cursor — the overlap case a real crash can always produce
+    daemon = ServiceDaemon(Collector(_replay_streams(path), _cfg()),
+                           state_dir=state, persist_every=2,
+                           tee_dir=tee, tee_chunk_samples=10,
+                           clock=clk.monotonic, sleep=clk.sleep)
+    daemon.run(n_rounds=5)
+    del daemon                               # kill: no close(), no flush
+
+    arch = os.path.join(tee, "traced.ctr")
+    partial = read_trace(arch)               # manifest must validate
+    assert partial.tpa.shape[1] >= 40        # >= everything persisted
+    np.testing.assert_array_equal(
+        partial.tpa, grid.tpa[:, :partial.tpa.shape[1]].astype(
+            partial.tpa.dtype))
+
+    # the partial archive replays through the normal pipeline
+    col = Collector([JobStream("re", TraceReplaySource(arch))],
+                    _cfg(retain=12))
+    assert sum(r.samples for r in col.run()) == partial.tpa.size
+
+    # restore + finish: the tee continues gaplessly to the exact trace
+    resumed = ServiceDaemon.restore(state, _replay_streams(path), _cfg(),
+                                    tee_dir=tee, tee_chunk_samples=10,
+                                    persist_every=2, clock=clk.monotonic,
+                                    sleep=clk.sleep)
+    resumed.run()
+    resumed.close()
+    full = read_trace(arch)
+    np.testing.assert_array_equal(full.tpa,
+                                  grid.tpa.astype(full.tpa.dtype))
+
+
+def test_tee_flushes_manifest_at_every_persist(tmp_path):
+    path, grid = _archive(tmp_path)
+    state, tee = str(tmp_path / "state"), str(tmp_path / "tee")
+    clk = SimClock()
+    # huge chunks: WITHOUT the persist-point flush nothing would ever
+    # reach the manifest before close
+    daemon = ServiceDaemon(Collector(_replay_streams(path), _cfg()),
+                           state_dir=state, persist_every=3,
+                           tee_dir=tee, tee_chunk_samples=100_000,
+                           clock=clk.monotonic, sleep=clk.sleep)
+    daemon.run(n_rounds=4)
+    del daemon                               # kill
+    back = read_trace(os.path.join(tee, "traced.ctr"))
+    # rounds 1-3 were persisted (and flushed); round 4 died in the buffer
+    assert back.tpa.shape[1] == 30
+    np.testing.assert_array_equal(back.tpa,
+                                  grid.tpa[:, :30].astype(back.tpa.dtype))
+
+
+def test_daemon_guards(tmp_path):
+    col = Collector([_sim_stream("j")], _cfg())
+    with pytest.raises(ValueError, match="state_dir"):
+        ServiceDaemon(col, persist_every=2)
+    with pytest.raises(ValueError, match="persist_every"):
+        ServiceDaemon(col, persist_every=-1)
+    col.on_grid = lambda st, g: None
+    with pytest.raises(ValueError, match="on_grid"):
+        ServiceDaemon(col, tee_dir=str(tmp_path / "tee"))
+
+
+def test_stop_interrupts_real_clock_pacing_sleep():
+    # default clock/sleep: stop() must wake the inter-round sleep (the
+    # SIGTERM path), not leave the daemon dozing toward a 300 s deadline
+    import time
+
+    daemon = ServiceDaemon(
+        Collector([_sim_stream("j", duration_s=3600)], _cfg()))
+    out = {}
+
+    def run():
+        out["reports"] = daemon.run(n_rounds=5)
+
+    t = threading.Thread(target=run)
+    t0 = time.monotonic()
+    t.start()
+    time.sleep(0.3)                   # first round done, daemon asleep
+    daemon.stop()
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert time.monotonic() - t0 < 5.0
+    assert 1 <= len(out["reports"]) < 5
+
+
+def test_empty_publish_reports_null_weighted_ofu_not_zero():
+    # before the first round the daemon publishes an empty rollup; the
+    # dashboard must read "no data yet" (null), never 0% OFU
+    daemon = ServiceDaemon(
+        Collector([_sim_stream("j")], _cfg()),
+        clock=SimClock().monotonic, sleep=SimClock().sleep)
+    fleet = daemon.store.fleet_series()
+    assert fleet["generation"] == 1
+    assert fleet["weighted_ofu"] is None and fleet["t_s"] == []
+
+
+def test_tee_rejects_adaptive_retiming_up_front(tmp_path):
+    # archives are uniform-cadence; the first retiming would crash the
+    # loop mid-round, so the combination must fail at construction
+    from repro.fleet.collector import AdaptiveConfig
+    col = Collector([_sim_stream("j")],
+                    _cfg(adaptive=AdaptiveConfig(min_interval_s=5.0)))
+    with pytest.raises(ValueError, match="adaptive"):
+        ServiceDaemon(col, tee_dir=str(tmp_path / "tee"))

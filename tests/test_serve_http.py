@@ -1,0 +1,233 @@
+"""HTTP serving layer (ISSUE 5 acceptance): a ServiceDaemon over a
+recorded archive with stubbed wall-clock pacing, queried CONCURRENTLY
+through the stdlib HTTP client while it runs, answers bucketwise
+identically to direct `scan_rollup`/`analyze_rollup` readout; repeated
+identical queries ride the generation ETag (304); error paths are
+honest JSON.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.fleet.collector import Collector, CollectorConfig, JobStream
+from repro.fleet.engine import simulate_devices
+from repro.fleet.regression import scan_rollup
+from repro.serve import (FleetAPIError, FleetAPIServer, FleetClient,
+                         ServiceDaemon, SimClock)
+from repro.telemetry import Event, StepProfile, TraceReplaySource
+from repro.telemetry.source import write_trace
+
+PROFILE = StepProfile(mxu_time_s=0.84, step_time_s=2.0)
+DETECTOR = {"window": 3, "min_duration": 1}
+
+
+def _from_json(xs):
+    return np.array([np.nan if x is None else x for x in xs], float)
+
+
+@pytest.fixture()
+def served(tmp_path):
+    """A daemon over two golden archives (one regressed, one healthy
+    with app MFU), served over HTTP; yields (daemon, server, run())."""
+    grids = {
+        "regressed": simulate_devices(
+            PROFILE, duration_s=3600, interval_s=30.0,
+            events=[Event(1800, 3600, slowdown=2.5)], n_devices=4,
+            seed=21),
+        "healthy": simulate_devices(
+            PROFILE, duration_s=3600, interval_s=30.0, n_devices=4,
+            seed=22),
+    }
+    streams = []
+    for name, grid in grids.items():
+        path = str(tmp_path / f"{name}.ctr")
+        write_trace(grid, path, chunk_samples=40)
+        streams.append(JobStream(
+            name, TraceReplaySource(path), chips=128, group="bf16",
+            app_mfu=0.38 if name == "healthy" else None))
+    clk = SimClock()
+    daemon = ServiceDaemon(
+        Collector(streams, CollectorConfig(round_s=300, bucket_s=300,
+                                           retain=12, detector=DETECTOR)),
+        clock=clk.monotonic, sleep=clk.sleep)
+    server = FleetAPIServer(daemon.store).start()
+    try:
+        yield daemon, server
+    finally:
+        server.stop()
+        daemon.close()
+
+
+def test_end_to_end_concurrent_serving_matches_direct_readout(served):
+    daemon, server = served
+    seen_gens, poll_errors = [], []
+
+    def poller():
+        client = FleetClient(server.url)
+        while not done.is_set():
+            try:
+                seen_gens.append(client.fleet()["generation"])
+                client.alerts()
+            except Exception as e:      # noqa: BLE001 — collected below
+                poll_errors.append(e)
+
+    done = threading.Event()
+    threads = [threading.Thread(target=poller) for _ in range(3)]
+    for t in threads:
+        t.start()
+    reports = daemon.run()
+    done.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not poll_errors
+    assert len(reports) == 12
+    # pollers watched the generation advance while the daemon ran
+    assert seen_gens and seen_gens[-1] > seen_gens[0]
+    assert all(b >= a for a, b in zip(seen_gens, seen_gens[1:]))
+
+    client = FleetClient(server.url)
+    roll = daemon.collector.rollup
+
+    # fleet + job series: bucketwise identical to direct readout
+    fleet = client.fleet()
+    np.testing.assert_array_equal(_from_json(fleet["mean"]),
+                                  roll.fleet_stats().mean)
+    for jid in ("regressed", "healthy"):
+        job = client.job(jid)
+        direct = roll.job_stats(jid)
+        np.testing.assert_array_equal(_from_json(job["mean"]), direct.mean)
+        np.testing.assert_array_equal(_from_json(job["weight"]),
+                                      direct.weight)
+        for q in (10, 50, 90):
+            np.testing.assert_array_equal(
+                _from_json(job["percentiles"][str(q)]),
+                direct.percentiles[q])
+
+    # top-k regressions == scan_rollup, absolute anchors
+    worst = client.top_regressions(k=5, **DETECTOR)
+    direct_regs = scan_rollup(roll, **DETECTOR)
+    assert {d["job_id"] for d in worst["regressions"]} \
+        == set(direct_regs) == {"regressed"}
+    r = direct_regs["regressed"][0]
+    assert worst["regressions"][0]["factor"] == pytest.approx(r.factor)
+    assert worst["regressions"][0]["start_bucket"] \
+        == roll.bucket0 + r.start_idx
+
+    # alerts match the collector's (one regression episode, fired once)
+    alerts = client.alerts()
+    assert [(a["job_id"], a["kind"]) for a in alerts["alerts"]] \
+        == [(a.job_id, a.kind) for a in daemon.collector.alerts]
+    assert ["regressed", "regression"] in alerts["active_episodes"]
+
+    # the cache story: identical repeat queries are 304-served
+    h0 = client.hits_304
+    again = client.fleet()
+    assert client.hits_304 == h0 + 1 and again == fleet
+    client.job("healthy")
+    assert client.hits_304 == h0 + 2
+    # the store never recomputed for the 304s
+    misses = daemon.store.cache_misses
+    client.fleet()
+    client.top_regressions(k=5, **DETECTOR)
+    assert daemon.store.cache_misses == misses
+
+
+def test_etag_rolls_over_when_generation_advances(served):
+    daemon, server = served
+    client = FleetClient(server.url)
+    daemon.run(n_rounds=1)
+    first = client.fleet()
+    assert client.fleet() == first and client.hits_304 == 1
+    daemon.run(n_rounds=1)                   # new generation published
+    second = client.fleet()
+    assert client.hits_304 == 1              # NOT a 304: fresh answer
+    assert second["generation"] > first["generation"]
+    assert len(second["t_s"]) >= len(first["t_s"])
+
+
+def test_http_error_paths(served):
+    daemon, server = served
+    daemon.run(n_rounds=2)
+    client = FleetClient(server.url)
+    with pytest.raises(FleetAPIError, match="unknown job") as ei:
+        client.job("nope")
+    assert ei.value.status == 404
+    with pytest.raises(FleetAPIError, match="unknown query kind") as ei:
+        client.query("frobnicate")
+    assert ei.value.status == 400
+    with pytest.raises(FleetAPIError, match="API root") as ei:
+        client._get("/v2/fleet")
+    assert ei.value.status == 404
+    with pytest.raises(FleetAPIError, match="percentiles") as ei:
+        client.fleet(qs=(120,))
+    assert ei.value.status == 400
+    with pytest.raises(FleetAPIError, match="not a int") as ei:
+        client.query("top_regressions", k="many")
+    assert ei.value.status == 400
+    with pytest.raises(FleetAPIError, match="limit=0") as ei:
+        client.alerts(limit=0)
+    assert ei.value.status == 400
+    # non-finite numeric params never reach the store (nan would poison
+    # cache keys and leak bare-NaN tokens into strict-JSON bodies)
+    for bad in ("nan", "inf", "-inf"):
+        with pytest.raises(FleetAPIError, match="finite") as ei:
+            client.goodput(healthy_ofu=bad)
+        assert ei.value.status == 400
+    # group series + explicit qs through /v1/query round the API out
+    grp = client.query("series", scope="group", id="bf16", qs="25,75")
+    assert set(grp["percentiles"]) == {"25", "75"}
+
+
+def test_etag_carries_boot_nonce_and_never_validates_invalid_paths(served):
+    import urllib.error
+    import urllib.request
+
+    daemon, server = served
+    daemon.run(n_rounds=1)
+    gen = daemon.store.generation
+
+    def get(path, inm=None):
+        req = urllib.request.Request(server.url + path)
+        if inm:
+            req.add_header("If-None-Match", inm)
+        try:
+            with urllib.request.urlopen(req, timeout=10) as resp:
+                return resp.status, resp.headers.get("ETag")
+        except urllib.error.HTTPError as e:
+            return e.code, e.headers.get("ETag")
+
+    status, etag = get("/v1/fleet")
+    assert status == 200 and etag == f'"gen-{daemon.store.boot}-{gen}"'
+    # a validator from a PREVIOUS server process (same generation count,
+    # different boot) must NOT 304 into stale data
+    assert get("/v1/fleet", inm=f'"gen-{gen}"')[0] == 200
+    assert get("/v1/fleet", inm=f'"gen-deadbeef-{gen}"')[0] == 200
+    # the real validator does 304
+    assert get("/v1/fleet", inm=etag)[0] == 304
+    # ...but never validates an invalid path or param into a 304
+    assert get("/v1/nonsense", inm=etag)[0] == 404
+    assert get("/v1/fleet?qs=120", inm=etag)[0] == 400
+
+
+def test_store_cache_is_bounded_under_param_cycling(served):
+    daemon, server = served
+    daemon.run(n_rounds=1)
+    store = daemon.store
+    client = FleetClient(server.url)
+    for k in range(store.max_cache_entries + 50):
+        client.goodput(healthy_ofu=round(0.2 + k * 1e-4, 6))
+    assert len(store._cache) <= store.max_cache_entries
+
+
+def test_jobs_listing_and_divergence_over_http(served):
+    daemon, server = served
+    daemon.run()
+    client = FleetClient(server.url)
+    assert client.jobs()["jobs"] == ["healthy", "regressed"]
+    assert client.jobs()["groups"] == ["bf16"]
+    div = client.divergence()
+    assert "r_all" in div or div["flagged"] == []
+    gp = client.goodput(healthy_ofu=0.5)
+    assert gp["healthy_ofu"] == 0.5
+    assert gp["jobs"][0]["job_id"] == "regressed"   # biggest waste pool

@@ -1,0 +1,258 @@
+"""FleetStore coverage (ISSUE 5): query answers are bucketwise identical
+to direct rollup/detector readout, the generation cache serves repeats
+without recomputing, publishes isolate readers from collector mutation,
+and every payload is strictly JSON-serializable (no NaN on the wire).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.fleet.collector import Collector, CollectorConfig, JobStream
+from repro.fleet.divergence import analyze_rollup
+from repro.fleet.regression import scan_rollup
+from repro.fleet.streaming import (StreamingRollup, WindowedRollup,
+                                   weighted_mean)
+from repro.serve.store import FleetStore
+from repro.telemetry import Event, SimulatorSource, StepProfile
+
+PROFILE = StepProfile(mxu_time_s=0.84, step_time_s=2.0)
+
+
+def _from_json(xs):
+    """Payload list (nulls for NaN) back to an array for comparisons."""
+    return np.array([np.nan if x is None else x for x in xs], float)
+
+
+def _collector(duration_s=3600, with_event=True, app_mfu=0.38):
+    streams = [
+        JobStream("healthy", SimulatorSource(
+            PROFILE, duration_s=duration_s, interval_s=30, n_devices=4,
+            seed=1), chips=64, group="bf16", app_mfu=app_mfu),
+        JobStream("regressing", SimulatorSource(
+            PROFILE, duration_s=duration_s, interval_s=30, n_devices=4,
+            seed=2, events=[Event(duration_s / 2, duration_s,
+                                  slowdown=2.5)] if with_event else ()),
+            chips=128, group="fp8"),
+    ]
+    cfg = CollectorConfig(round_s=300, bucket_s=300, retain=12,
+                          detector={"window": 3, "min_duration": 1})
+    col = Collector(streams, cfg)
+    col.run()
+    return col
+
+
+def test_series_queries_match_direct_rollup_readout():
+    col = _collector()
+    store = FleetStore()
+    store.update_from(col)
+    roll = col.rollup
+
+    fleet = store.fleet_series()
+    direct = roll.fleet_stats()
+    np.testing.assert_array_equal(_from_json(fleet["mean"]), direct.mean)
+    np.testing.assert_array_equal(_from_json(fleet["weight"]),
+                                  direct.weight)
+    np.testing.assert_allclose(_from_json(fleet["t_s"]), direct.centers_s)
+    for q in (10, 50, 90):
+        np.testing.assert_array_equal(
+            _from_json(fleet["percentiles"][str(q)]),
+            direct.percentiles[q])
+    assert fleet["weighted_ofu"] == pytest.approx(weighted_mean(direct))
+    assert fleet["window"] == {"bucket0": roll.bucket0,
+                               "end_bucket": roll.end_bucket,
+                               "retain": roll.retain}
+    at = roll.fleet_alltime()
+    assert fleet["alltime"]["mean"] == pytest.approx(at["mean"])
+    assert fleet["alltime"]["weight"] == pytest.approx(at["weight"])
+
+    for jid in ("healthy", "regressing"):
+        job = store.job_series(jid)
+        np.testing.assert_array_equal(_from_json(job["mean"]),
+                                      roll.job_stats(jid).mean)
+        assert job["scope"] == "job" and job["id"] == jid
+    assert store.job_series("healthy")["meta"]["app_mfu"] == 0.38
+    assert store.job_series("regressing")["meta"] is None
+
+    grp = store.group_series("fp8")
+    np.testing.assert_array_equal(_from_json(grp["mean"]),
+                                  roll.group_stats("fp8").mean)
+
+
+def test_top_regressions_matches_scan_rollup_with_absolute_anchors():
+    col = _collector()
+    store = FleetStore()
+    store.update_from(col)
+    worst = store.top_regressions(k=3, window=3, min_duration=1)
+    direct = scan_rollup(col.rollup, window=3, min_duration=1)
+    assert worst["total"] == sum(len(v) for v in direct.values())
+    top = worst["regressions"][0]
+    assert top["job_id"] == "regressing"
+    r = direct["regressing"][0]
+    assert top["factor"] == pytest.approx(r.factor)
+    assert top["start_bucket"] == col.rollup.bucket0 + r.start_idx
+    assert top["ongoing"] == (r.end_idx is None)
+    # ranked hardest-first
+    factors = [d["factor"] for d in worst["regressions"]]
+    assert factors == sorted(factors, reverse=True)
+
+
+def test_alerts_and_divergence_queries():
+    col = _collector()
+    store = FleetStore()
+    store.update_from(col)
+    al = store.alerts()
+    assert al["total"] == len(col.alerts)
+    assert [(a["job_id"], a["kind"]) for a in al["alerts"]] \
+        == [(a.job_id, a.kind) for a in col.alerts]
+    assert al["active_episodes"] == [list(k) for k in col.deduper.active]
+    assert store.alerts(limit=1)["alerts"] == al["alerts"][-1:]
+
+    div = store.divergence()
+    rep = analyze_rollup(col.rollup, empty_ok=True)
+    assert div["r_all"] == pytest.approx(rep.r_all)
+    assert [f["job_id"] for f in div["flagged"]] \
+        == [p.job_id for p in rep.flagged]
+
+
+def test_alerts_limit_validated_and_republish_is_incremental():
+    col = _collector()
+    store = FleetStore()
+    store.update_from(col)
+    with pytest.raises(ValueError, match="limit=0"):
+        store.alerts(limit=0)
+    with pytest.raises(ValueError, match="limit=-3"):
+        store.alerts(limit=-3)
+    # republishing the same append-only alert log reuses the already-
+    # converted payload prefix (O(new alerts) per round, not O(all))
+    first = store.alerts()["alerts"]
+    store.update_from(col)
+    second = store.alerts()["alerts"]
+    assert len(first) == len(second) > 0
+    assert all(a is b for a, b in zip(first, second))
+
+
+def test_goodput_summary_weights_and_waste_ranking():
+    col = _collector()
+    store = FleetStore()
+    store.update_from(col)
+    gp = store.goodput(healthy_ofu=0.40)
+    roll = col.rollup
+    total_w = sum(roll.job_alltime(j, qs=())["weight"] for j in roll.jobs)
+    assert gp["weight"] == pytest.approx(total_w)
+    want = sum(roll.job_alltime(j, qs=())["mean"]
+               * roll.job_alltime(j, qs=())["weight"]
+               for j in roll.jobs) / total_w
+    assert gp["weighted_ofu"] == pytest.approx(want)
+    # only 'healthy' registered an app MFU
+    healthy_w = roll.job_alltime("healthy", qs=())["weight"]
+    assert gp["app_mfu_coverage"] == pytest.approx(healthy_w / total_w)
+    assert gp["ofu_coverage"] == 1.0
+    # the regressed job wastes more of its pool; ranking is waste-desc
+    wastes = [j["waste"] for j in gp["jobs"]]
+    assert wastes == sorted(wastes, reverse=True)
+    assert gp["jobs"][0]["job_id"] == "regressing"
+
+
+def test_generation_cache_serves_repeats_and_invalidates_on_update():
+    col = _collector(duration_s=1200, with_event=False)
+    store = FleetStore()
+    store.update_from(col)
+    g1 = store.generation
+    first = store.fleet_series()
+    assert store.cache_misses == 1 and store.cache_hits == 0
+    assert store.fleet_series() is first        # cached object, not a copy
+    assert store.cache_hits == 1
+    # different params = different cache key
+    store.fleet_series(qs=(50,))
+    assert store.cache_misses == 2
+    # publish invalidates: same query recomputes at the new generation
+    store.update_from(col)
+    assert store.generation == g1 + 1
+    second = store.fleet_series()
+    assert second is not first
+    assert second["generation"] == g1 + 1
+    assert store.cache_misses == 3
+
+
+def test_update_copy_isolates_store_from_collector_mutation():
+    col = _collector(duration_s=1800, with_event=False)
+    store = FleetStore()
+    mid = col.rollup.spawn_empty().merge(col.rollup)   # reference answer
+    store.update_from(col)
+    before = _from_json(store.fleet_series()["mean"]).copy()
+    # keep collecting: the live rollup moves on, the store must not
+    col.streams[0].source.duration_s = 3600           # extend the run
+    col.streams[1].source.duration_s = 3600
+    col.run()
+    np.testing.assert_array_equal(
+        _from_json(store.fleet_series()["mean"]), before)
+    np.testing.assert_array_equal(before, mid.fleet_stats().mean)
+
+
+def test_empty_store_answers_every_query():
+    store = FleetStore()
+    assert store.fleet_series()["t_s"] == []
+    assert store.fleet_series()["weighted_ofu"] is None
+    assert store.jobs() == {"jobs": [], "groups": [], "generation": 0,
+                            "round_idx": 0, "clock_s": 0.0}
+    assert store.top_regressions()["regressions"] == []
+    assert store.alerts()["alerts"] == []
+    assert store.goodput()["jobs"] == []
+    assert store.divergence()["flagged"] == []
+
+
+def test_unknown_scope_ids_raise_keyerror():
+    col = _collector(duration_s=1200, with_event=False)
+    store = FleetStore()
+    store.update_from(col)
+    with pytest.raises(KeyError, match="nope"):
+        store.job_series("nope")
+    with pytest.raises(KeyError, match="int8"):
+        store.group_series("int8")
+
+
+def test_payloads_are_strict_json():
+    # NaN must never reach the wire: a rollup with gap buckets produces
+    # NaN means, and json.dumps(allow_nan=False) proves they were cleaned
+    roll = WindowedRollup(bucket_s=60, retain=10)
+    t = np.array([30.0, 90.0, 570.0])          # buckets 0, 1, then a gap
+    roll.observe("gappy", t, np.array([0.4, 0.5, 0.3]))
+    store = FleetStore()
+    store.update(roll, round_idx=1, clock_s=600.0)
+    for payload in (store.fleet_series(), store.job_series("gappy"),
+                    store.jobs(), store.top_regressions(),
+                    store.alerts(), store.goodput(), store.divergence()):
+        json.dumps(payload, allow_nan=False)
+    assert None in store.job_series("gappy")["mean"]   # the gap, as null
+
+
+def test_update_from_fleet_collector_serves_reduced_state():
+    from repro.fleet.collector import FleetCollector
+
+    def host(jid, seed):
+        src = SimulatorSource(PROFILE, duration_s=1800, interval_s=30,
+                              n_devices=2, seed=seed)
+        return Collector([JobStream(jid, src, chips=32)],
+                         CollectorConfig(round_s=300, retain=6))
+
+    fc = FleetCollector([host("a", 1), host("b", 2)], reduce_every=1)
+    fc.run()
+    store = FleetStore()
+    store.update_from(fc)
+    assert store.jobs()["jobs"] == ["a", "b"]
+    np.testing.assert_array_equal(
+        _from_json(store.fleet_series()["mean"]),
+        fc.fleet.fleet_stats().mean)
+
+
+def test_plain_rollup_publishes_without_window():
+    roll = StreamingRollup(bucket_s=60)
+    roll.observe("j", np.arange(1, 601, dtype=float),
+                 np.full(600, 0.4))
+    store = FleetStore()
+    store.update(roll)
+    fleet = store.fleet_series()
+    assert "window" not in fleet and "alltime" not in fleet
+    gp = store.goodput()
+    assert gp["jobs"][0]["ofu"] == pytest.approx(0.4)
