@@ -61,6 +61,118 @@ def _vector(n_dev: int, duration_s: float) -> None:
                      events=EVENTS, n_devices=n_dev, seed=0)
 
 
+def run_jax(rows: list[Row] | None = None) -> list[Row]:
+    """jax engine backend + device-side rollup ingest (ISSUE 6).
+
+    Defaults to 100k devices x 1 hour of 30 s scrapes; the paper-scale
+    1M x 24 h point is the same code one env knob away
+    (FLEET_JAX_DEVICES=1000000 FLEET_JAX_HOURS=24 — practical only with
+    real accelerators and a device mesh, ~11 GB per f32 grid).  Reports
+    the jax engine head-to-head with the fused-NumPy engine on the SAME
+    operating point, plus all three rollup-ingest paths: the pallas
+    histogram-accumulate kernel (interpret mode off-TPU), its XLA
+    fallback, and the host-side NumPy bucketize.
+    """
+    rows = [] if rows is None else rows
+    try:
+        import jax
+        from repro.fleet.engine_jax import simulate_jobs_jax
+        from repro.kernels.fleet_hist import _interpret, ofu_bucket_hist
+    except Exception as e:  # pragma: no cover — env without jax
+        print(f"BENCH-SKIP fleet_engine_jax ({type(e).__name__}: {e})")
+        return rows
+    from repro.fleet.engine import JobSlot, simulate_jobs_fused
+
+    n_dev = int(os.environ.get("FLEET_JAX_DEVICES", "100000"))
+    hours = float(os.environ.get("FLEET_JAX_HOURS", "1"))
+    dur = hours * 3600.0
+    devsec = n_dev * dur
+    repeat = 1 if n_dev >= 50_000 else 3
+    slot = JobSlot(PROFILE, dur, INTERVAL_S, events=EVENTS,
+                   stragglers=np.ones(n_dev))
+
+    def _sim():
+        (g,) = simulate_jobs_jax([slot], seed=0)
+        jax.block_until_ready((g.tpa, g.clock_mhz))
+        return g
+
+    g = _sim()                              # compile off the clock
+    g, us_jax = timed(_sim, repeat=repeat)
+    (gn,), us_np = timed(
+        lambda: simulate_jobs_fused([slot], seed=0), repeat=repeat)
+    thr_jax = devsec / (us_jax / 1e6)
+    label = f"fleet_engine.jax_{n_dev}dev_{hours:g}h"
+    rows.append(Row(label, us_jax,
+                    f"device_seconds_per_wall_s={thr_jax:.0f} "
+                    f"numpy_wall_s={us_np / 1e6:.2f}"))
+
+    # rollup ingest over the device grid: pallas vs XLA vs host NumPy.
+    # The kernels get identical inputs (same grid, same aligned bucket
+    # map the StreamingRollup routing would derive).
+    bucket_s = 300.0
+    S = int(g.tpa.shape[1])
+    n_cells = n_dev * S
+    spb = max(int(round(bucket_s / INTERVAL_S)), 1)
+    col = np.arange(S) // spb
+    roll = StreamingRollup(bucket_s=bucket_s)
+    kw = dict(inv_fmax=1.0 / slot.chip.f_max_mhz, edges=roll.edges,
+              col_bucket=col, n_buckets=int(col[-1]) + 1 if S else 0)
+
+    def _kernel(use_pallas):
+        out = ofu_bucket_hist(g.tpa, g.clock_mhz, use_pallas=use_pallas,
+                              **kw)
+        jax.block_until_ready(out)
+        return out
+
+    _kernel(True), _kernel(False)           # compile off the clock
+    (h_pl, _), us_pl = timed(_kernel, True, repeat=repeat)
+    (h_xla, _), us_xla = timed(_kernel, False, repeat=repeat)
+
+    def _dev_ingest():                      # full add_grid device route
+        r = StreamingRollup(bucket_s=bucket_s)
+        r.add_grid("j", g, chips=n_dev)
+        return r
+
+    def _host_ingest():                     # fused-NumPy baseline
+        r = StreamingRollup(bucket_s=bucket_s)
+        r.add_grid("j", gn, chips=n_dev)
+        return r
+
+    r_dev, us_dev = timed(_dev_ingest, repeat=repeat)
+    r_host, us_host = timed(_host_ingest, repeat=repeat)
+    interp = _interpret()
+    rows.append(Row("fleet_engine.jax_ingest_pallas", us_pl,
+                    f"samples_per_s={n_cells / (us_pl / 1e6):.0f} "
+                    f"interpret={int(interp)}"))
+    rows.append(Row("fleet_engine.jax_ingest_xla", us_xla,
+                    f"samples_per_s={n_cells / (us_xla / 1e6):.0f}"))
+    rows.append(Row("fleet_engine.jax_ingest_host_numpy", us_host,
+                    f"samples_per_s={n_cells / (us_host / 1e6):.0f}"))
+
+    # cross-backend sanity on the spot the driver reads: the two ingest
+    # kernels agree bitwise, and the engines agree statistically
+    assert np.array_equal(np.asarray(h_pl), np.asarray(h_xla))
+    ofu_jax = float(r_dev.fleet_stats(qs=()).mean[0])
+    ofu_np = float(r_host.fleet_stats(qs=()).mean[0])
+
+    print("BENCH " + json.dumps({
+        "name": "fleet_engine_jax",
+        "devices": n_dev,
+        "hours": hours,
+        "jax_wall_s": round(us_jax / 1e6, 3),
+        "numpy_wall_s": round(us_np / 1e6, 3),
+        "jax_devsec_per_s": round(thr_jax),
+        "pallas_interpret": interp,
+        "ingest_pallas_samples_per_s": round(n_cells / (us_pl / 1e6)),
+        "ingest_xla_samples_per_s": round(n_cells / (us_xla / 1e6)),
+        "ingest_numpy_samples_per_s": round(n_cells / (us_host / 1e6)),
+        "ingest_device_route_wall_s": round(us_dev / 1e6, 3),
+        "first_bucket_ofu_jax": round(ofu_jax, 4),
+        "first_bucket_ofu_numpy": round(ofu_np, 4),
+    }))
+    return rows
+
+
 def run() -> list[Row]:
     rows = []
     # -- head-to-head on the same slice (16 devices x 30 min) -------------
@@ -137,6 +249,8 @@ def run() -> list[Row]:
         "fused_speedup_x": round(fused_speedup, 1),
         "fused_devsec_per_s": round(thr_fused),
     }))
+
+    run_jax(rows)
 
     # -- collector round overhead: scrape -> windowed ingest -> detect -----
     # 64 monitored jobs x 16 devices, 5-minute rounds at 30 s scrapes: the

@@ -30,6 +30,9 @@ _EXPORTS = {
     "JobSlot": "repro.fleet.engine",
     "simulate_devices": "repro.fleet.engine",
     "simulate_jobs_fused": "repro.fleet.engine",
+    # jax backend — resolving it imports jax, so it stays lazy like
+    # everything else here
+    "simulate_jobs_jax": "repro.fleet.engine_jax",
     "FleetRollup": "repro.fleet.goodput",
     "rollup": "repro.fleet.goodput",
     "JobSpec": "repro.fleet.jobs",

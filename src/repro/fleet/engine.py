@@ -73,7 +73,7 @@ def simulate_devices(profile: StepProfile, *, duration_s: float,
                      chip: ChipSpec = DEFAULT_CHIP,
                      clock_model: Optional[ClockModel] = None,
                      events: Sequence[Event] = (),
-                     stragglers=None, n_devices: int = 1,
+                     stragglers=None, n_devices: Optional[int] = None,
                      seed: int = 0,
                      params: Optional[EngineParams] = None) -> DeviceGrid:
     """Simulate a whole device group's counter streams in one shot.
@@ -81,15 +81,18 @@ def simulate_devices(profile: StepProfile, *, duration_s: float,
     stragglers: optional (n_devices,) per-device step-time multipliers;
     defaults to 1.0 everywhere.  All devices share the step profile and
     event timeline (the per-job model `simulate_job` uses); straggler
-    spread is the per-device degree of freedom.
+    spread is the per-device degree of freedom.  n_devices defaults to
+    len(stragglers) (or 1); passing BOTH requires them to agree — the
+    old behaviour quietly simulated len(stragglers) devices whatever
+    n_devices said.
 
     Implemented as a single-slot fused pass — `simulate_jobs_fused` is the
     one grid evaluator, whether one job or six hundred.
     """
     if stragglers is None:
-        stragglers = np.ones(n_devices)
+        stragglers = np.ones(1 if n_devices is None else n_devices)
     stragglers = np.asarray(stragglers, float)
-    if n_devices not in (1, len(stragglers)):
+    if n_devices is not None and n_devices != len(stragglers):
         raise ValueError(f"n_devices={n_devices} conflicts with "
                          f"len(stragglers)={len(stragglers)}")
     slot = JobSlot(profile, duration_s, interval_s, events=events,
@@ -109,15 +112,23 @@ def simulate_jobs_fused(slots: Sequence[JobSlot], *, seed: int = 0,
     params = params or EngineParams()
     rng = np.random.default_rng(seed)
     out: list = [None] * len(slots)
+    for members in group_slots(slots).values():
+        _simulate_group(members, out, rng, params)
+    return out
+
+
+def group_slots(slots: Sequence[JobSlot]) -> dict:
+    """Group slots by (scrape interval, clock-model constants) — the
+    fusion key every batched backend (NumPy here, jax in `engine_jax`)
+    shares, so each group gets one time grid and one OU recurrence.
+    Values are [(slot index, slot, resolved ClockModel), ...]."""
     groups: dict = {}
     for i, sl in enumerate(slots):
         cm = sl.clock_model or ClockModel(chip=sl.chip)
         key = (float(sl.interval_s), cm.theta, cm.sigma_mhz,
                cm.throttle_frac, cm.f_min_frac, cm.chip.f_max_mhz)
         groups.setdefault(key, []).append((i, sl, cm))
-    for members in groups.values():
-        _simulate_group(members, out, rng, params)
-    return out
+    return groups
 
 
 def _simulate_group(members, out, rng, params: EngineParams) -> None:

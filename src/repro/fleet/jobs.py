@@ -194,12 +194,14 @@ def simulate_job(spec: JobSpec, max_devices: int = 4, *,
     """Simulate the job's observable counter streams.
 
     engine: 'vector' (default under 'auto') runs the whole device group as
-    one batched pass through repro.fleet.engine; 'scalar' keeps the
-    per-device, per-poll reference backend (`SimulatedDeviceBackend`).
-    Both draw from the same generative model; equivalence is covered by
-    tests/test_fleet_engine.py.
+    one batched pass through repro.fleet.engine; 'jax' the same pass on
+    the jax backend (device arrays out — see repro.fleet.engine_jax);
+    'scalar' keeps the per-device, per-poll reference backend
+    (`SimulatedDeviceBackend`).  All draw from the same generative model;
+    equivalence is covered by tests/test_fleet_engine.py and
+    tests/test_engine_jax.py.
     """
-    from repro.fleet.engine import simulate_devices
+    from repro.fleet.engine import JobSlot, simulate_devices
 
     prof, app, app_exact, stragglers, seeds = _prep_job(spec, max_devices)
     if engine in ("auto", "fused"):
@@ -211,6 +213,12 @@ def simulate_job(spec: JobSpec, max_devices: int = 4, *,
             interval_s=spec.scrape_interval_s, chip=spec.chip,
             events=spec.events, stragglers=stragglers,
             seed=int(seeds[0]))
+    elif engine == "jax":
+        from repro.fleet.engine_jax import simulate_jobs_jax
+        grid = simulate_jobs_jax(
+            [JobSlot(prof, spec.duration_s, spec.scrape_interval_s,
+                     events=spec.events, stragglers=stragglers,
+                     chip=spec.chip)], seed=int(seeds[0]))[0]
     elif engine == "scalar":
         series = []
         for d, straggle in enumerate(stragglers):
@@ -222,13 +230,13 @@ def simulate_job(spec: JobSpec, max_devices: int = 4, *,
                                  spec.scrape_interval_s))
         grid = DeviceGrid.from_series(series)
     else:
-        raise ValueError(f"unknown engine {engine!r} "
-                         "(expected 'auto', 'fused', 'vector' or 'scalar')")
+        raise ValueError(f"unknown engine {engine!r} (expected 'auto', "
+                         "'fused', 'jax', 'vector' or 'scalar')")
     return _telemetry(spec, prof, app, app_exact, grid)
 
 
-def _simulate_fleet_fused(specs: Sequence[JobSpec],
-                          max_devices: int) -> list[JobTelemetry]:
+def _simulate_fleet_fused(specs: Sequence[JobSpec], max_devices: int, *,
+                          backend: str = "numpy") -> list[JobTelemetry]:
     from repro.fleet.engine import JobSlot, simulate_jobs_fused
 
     slots, meta, entropy = [], [], []
@@ -242,7 +250,11 @@ def _simulate_fleet_fused(specs: Sequence[JobSpec],
     # one master seed for the fused grid's shared RNG streams, derived
     # deterministically from every job's own stream
     seed = int(np.random.default_rng(entropy or [0]).integers(0, 2 ** 31))
-    grids = simulate_jobs_fused(slots, seed=seed)
+    if backend == "jax":
+        from repro.fleet.engine_jax import simulate_jobs_jax
+        grids = simulate_jobs_jax(slots, seed=seed)
+    else:
+        grids = simulate_jobs_fused(slots, seed=seed)
     return [_telemetry(spec, prof, app, app_exact, g)
             for (spec, prof, app, app_exact), g in zip(meta, grids)]
 
@@ -256,9 +268,12 @@ def simulate_fleet(specs: Sequence[JobSpec], *, max_devices: int = 4,
     evaluation and one batched OU pass per (interval, clock-model) group —
     so the §V-B/§VI scenarios (608-job correlation sweeps, 2.5× regression
     hunts) cost one grid pass instead of a Python loop of per-job passes.
+    'jax' runs the same fused grids on the jax backend
+    (repro.fleet.engine_jax: lax.scan OU, mesh-sharded rows, device-array
+    grids that `StreamingRollup.add_grid` reduces on-accelerator).
     'vector' keeps the per-job batched pass, 'scalar' the per-device
-    reference loop; all three draw from the same generative model
-    (equivalence: tests/test_fleet_engine.py).
+    reference loop; all engines draw from the same generative model
+    (equivalence: tests/test_fleet_engine.py, tests/test_engine_jax.py).
 
     Reproducibility semantics: the fused grid's jitter/clock noise comes
     from ONE stream seeded by the whole sweep, so a job's exact counter
@@ -269,7 +284,12 @@ def simulate_fleet(specs: Sequence[JobSpec], *, max_devices: int = 4,
     """
     if engine == "auto":
         engine = "fused"
-    if engine == "fused":
-        return _simulate_fleet_fused(specs, max_devices)
+    if engine in ("fused", "jax"):
+        return _simulate_fleet_fused(
+            specs, max_devices,
+            backend="jax" if engine == "jax" else "numpy")
+    if engine not in ("vector", "scalar"):
+        raise ValueError(f"unknown engine {engine!r} (expected 'auto', "
+                         "'fused', 'jax', 'vector' or 'scalar')")
     return [simulate_job(s, max_devices=max_devices, engine=engine)
             for s in specs]

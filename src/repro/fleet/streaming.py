@@ -28,6 +28,13 @@ from repro.core.peaks import DEFAULT_CHIP, ChipSpec
 _FLEET = "__fleet__"
 
 
+def _is_device_array(x) -> bool:
+    """True for jax device arrays (without importing jax up front) — the
+    signal that `add_grid` should reduce on-device via the fused kernel."""
+    mod = type(x).__module__
+    return mod.startswith("jax") or mod.startswith("jaxlib")
+
+
 def precision_label(precisions: dict) -> str:
     """Canonical group label for a job's precision mix, e.g. 'bf16+fp8'."""
     return "+".join(sorted(p for p, f in precisions.items() if f > 0)) \
@@ -166,16 +173,71 @@ class StreamingRollup:
         divergence triage.  Returns the grid's OFU series so callers that
         need the raw samples (the collector's adaptive controller) don't
         recompute it.
+
+        A grid holding jax device arrays (the `engine_jax` backend's
+        output) is reduced ON-DEVICE: `repro.kernels.fleet_hist` fuses
+        ofu_series + bucketize + bin-scatter, and only the few-KB
+        (bucket, bin) histogram crosses to host.
         """
         chips = grid.n_devices if chips is None else chips
         if app_mfu is not None:
             self._job_meta[job_id] = {
                 "chips": chips, "app_mfu": float(app_mfu), "arch": arch,
                 "flops_variant": flops_variant}
+        weight = chips / max(grid.n_devices, 1)
+        if _is_device_array(grid.tpa):
+            return self._ingest_device_grid(job_id, grid, chip, group,
+                                            weight)
         ofu = ofu_series(grid.tpa, grid.clock_mhz, chip)
         self.observe(job_id, np.broadcast_to(grid.times_s, ofu.shape), ofu,
-                     group=group, weight=chips / max(grid.n_devices, 1))
+                     group=group, weight=weight)
         return ofu
+
+    def _ingest_device_grid(self, job_id, grid, chip, group, weight):
+        """jax-grid ingest: per-device OFU never reaches the host — the
+        fused kernel reduces the grid to per-bucket histograms on the
+        accelerator and the result folds through `observe_hist`.  Time
+        bucketing follows `_bucketize`'s right-closed rule exactly (the
+        column->bucket map is computed here with the same formula); bin
+        edges are compared in f32, the telemetry dtype.  Returns the
+        device OFU expression for callers that want raw samples.
+        """
+        from repro.kernels.fleet_hist import ofu_bucket_hist
+        t_s = grid.times_s
+        inv_fmax = 1.0 / chip.f_max_mhz
+        if t_s.size == 0 or grid.n_devices == 0:
+            return grid.tpa * grid.clock_mhz * inv_fmax
+        b_abs = np.maximum(
+            np.ceil(t_s / self.bucket_s).astype(int) - 1, 0)
+        b0 = int(b_abs[0])
+        hist, sums = ofu_bucket_hist(
+            grid.tpa, grid.clock_mhz, inv_fmax=inv_fmax, edges=self.edges,
+            col_bucket=b_abs - b0, n_buckets=int(b_abs[-1]) - b0 + 1)
+        self.observe_hist(job_id, np.asarray(hist, float),
+                          np.asarray(sums, float), b0=b0, group=group,
+                          weight=weight)
+        return grid.tpa * grid.clock_mhz * inv_fmax
+
+    def observe_hist(self, job_id: str, hist: np.ndarray,
+                     sums: np.ndarray, *, b0: int = 0,
+                     group: str = "unknown", weight: float = 1.0) -> None:
+        """Fold PRE-BINNED per-bucket histogram rows into every scope —
+        the histogram-domain twin of observe(), fed by the device-side
+        fused ingest.  hist: (B, bins) counts; sums: (B,) value sums;
+        b0: the ABSOLUTE bucket index of row 0.  Rows must use this
+        rollup's bin edges (hist widths add only in a shared basis).
+        """
+        hist = np.asarray(hist)
+        if hist.shape[0] == 0:
+            return
+        if hist.shape[1] != self.bins:
+            raise ValueError(f"histogram has {hist.shape[1]} bins, "
+                             f"rollup has {self.bins}")
+        b_needed = b0 + hist.shape[0]
+        for scope in (("job", job_id), ("group", group), ("group", _FLEET)):
+            h, s = self._scope_arrays(scope, b_needed)
+            h[b0:b_needed] += hist * weight
+            s[b0:b_needed] += np.asarray(sums) * weight
 
     # -- distribution: merge + wire format ----------------------------------
     def merge(self, other: "StreamingRollup") -> "StreamingRollup":
@@ -264,10 +326,15 @@ class StreamingRollup:
         if h is None:
             empty = np.empty(0)
             return BucketStats(self.bucket_s, empty, empty, t0_s=t0)
+        s = self._sums[scope]
         if h.shape[0] < self.n_buckets:            # pad lazily-grown scopes
-            h, s = self._scope_arrays(scope, self.n_buckets)
-        else:
-            s = self._sums[scope]
+            # ...LOCALLY: readouts run concurrently on published rollup
+            # copies (one FleetStore snapshot, many HTTP reader threads),
+            # so _stats must never resize/reassign the shared arrays —
+            # a racing reader could see a torn _scope_arrays reassignment
+            pad = self.n_buckets - h.shape[0]
+            h = np.concatenate([h, np.zeros((pad, self.bins))])
+            s = np.concatenate([s, np.zeros(pad)])
         w = h.sum(axis=1)
         with np.errstate(invalid="ignore", divide="ignore"):
             mean = np.where(w > 0, s / np.maximum(w, 1e-12), np.nan)
@@ -434,6 +501,35 @@ class WindowedRollup(StreamingRollup):
                 self._ev_arrays(scope)
                 np.add.at(self._ev_hist[scope], k[~live], weight)
                 self._ev_sum[scope] += float(v[~live].sum() * weight)
+
+    def observe_hist(self, job_id: str, hist: np.ndarray,
+                     sums: np.ndarray, *, b0: int = 0,
+                     group: str = "unknown", weight: float = 1.0) -> None:
+        """Pre-binned ingest with the window semantics of observe():
+        advance the horizon to cover the newest row, land live rows in
+        the window, and fold rows already past the horizon straight into
+        the all-time totals (same edge `observe` documents)."""
+        hist = np.asarray(hist)
+        B = hist.shape[0]
+        if B == 0:
+            return
+        if hist.shape[1] != self.bins:
+            raise ValueError(f"histogram has {hist.shape[1]} bins, "
+                             f"rollup has {self.bins}")
+        sums = np.asarray(sums)
+        self._advance_to(b0 + B)
+        cut = min(max(self.bucket0 - b0, 0), B)     # rows past the horizon
+        live = B - cut
+        rel0 = b0 + cut - self.bucket0
+        for scope in (("job", job_id), ("group", group), ("group", _FLEET)):
+            if cut and hist[:cut].any():
+                self._ev_arrays(scope)
+                self._ev_hist[scope] += hist[:cut].sum(axis=0) * weight
+                self._ev_sum[scope] += float(sums[:cut].sum()) * weight
+            h, s = self._scope_arrays(scope, rel0 + live if live else 0)
+            if live:
+                h[rel0:rel0 + live] += hist[cut:] * weight
+                s[rel0:rel0 + live] += sums[cut:] * weight
 
     # -- distribution ---------------------------------------------------
     def merge(self, other: StreamingRollup) -> "WindowedRollup":

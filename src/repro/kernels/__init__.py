@@ -3,6 +3,7 @@
 gemm             — MXU-tiled GEMM; static grid = exact FLOPs_profiled oracle
 flash_attention  — online-softmax attention (train/prefill fast path)
 ssd_scan         — Mamba2 SSD intra-chunk block
+fleet_hist       — fused OFU histogram-accumulate (rollup device ingest)
 ops              — jit'd wrappers (padding, GemmProfile metadata)
 ref              — pure-jnp oracles for the allclose tests
 """

@@ -1,0 +1,199 @@
+"""Fused OFU histogram-accumulate — the device side of rollup ingest.
+
+`StreamingRollup.add_grid` over a NumPy grid computes the per-device OFU
+series on the host and scatter-adds it into per-bucket histograms.  For a
+jax engine grid that round-trip is the bottleneck: a 1M-device day of
+30 s scrapes is ~23 GB of per-device OFU that exists only to be reduced
+into a few kilobytes of (bucket, bin) weights.  This module keeps the
+reduction on the device:
+
+    ofu = tpa * clock / f_max          (Eq. 1, elementwise)
+    k   = bucketize(ofu, edges)        (comparison-based — see below)
+    hist[b, k] += 1 ; sums[b] += ofu   (per time-bucket accumulate)
+
+fused into one pass, so only the (n_buckets, bins) histogram and the
+(n_buckets,) weighted sums ever reach the host.
+
+Bin assignment is COMPARISON-based (count of edges ≤ value — digitize's
+definition), never arithmetic on the value: XLA is free to contract or
+reorder a `floor((v - lo) * inv_width)` chain at different intermediate
+precision than the host, which flips samples sitting one ulp from a bin
+edge.  Comparisons on identical f32 bits are exact, so the kernel, the
+XLA fallback, and the NumPy oracle agree bin-for-bin by construction.
+
+Two implementations share the arithmetic:
+
+  * `pallas` — a `pl.pallas_call` kernel over a (device-blocks, buckets)
+    grid: each step computes a tile's OFU, bins it via a one-hot
+    compare against a bin iota, and accumulates one bucket row of the
+    output in VMEM.  Requires bucket-aligned columns (every time bucket
+    spans the same number of scrape columns — the steady-state shape);
+    runs interpreted off-TPU like every other kernel in this package.
+  * `xla` — a jnp searchsorted + scatter-add over (bucket, bin) keys;
+    handles ragged column->bucket maps and is the fast path on CPU.
+
+`ofu_bucket_hist` picks automatically; `bucket_hist_ref` is the NumPy
+oracle the equivalence tests pin both against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _edges_f32(edges: np.ndarray) -> np.ndarray:
+    """Edge grid in the comparison dtype (f32, matching the engine's
+    telemetry); must be strictly increasing."""
+    edges = np.asarray(edges, np.float32)
+    if edges.ndim != 1 or len(edges) < 2 or not (np.diff(edges) > 0).all():
+        raise ValueError("edges must be a 1-D strictly-increasing grid")
+    return edges
+
+
+def _aligned_spb(col_bucket: np.ndarray, n_buckets: int) -> Optional[int]:
+    """Samples-per-bucket when every bucket spans an equal run of columns
+    (the last may run short); None when the map is ragged."""
+    S = len(col_bucket)
+    if S == 0 or n_buckets <= 0:
+        return None
+    spb = int(np.searchsorted(col_bucket, 1)) if n_buckets > 1 else S
+    if spb <= 0:
+        return None
+    if np.array_equal(col_bucket, np.arange(S) // spb):
+        return spb
+    return None
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel: (device-blocks, buckets) grid, one-hot bin accumulate
+# ---------------------------------------------------------------------------
+def _hist_kernel(tpa_ref, clock_ref, edges_ref, hist_ref, sum_ref, *,
+                 n_rows: int, n_cols: int, spb: int, block_d: int,
+                 bins: int, inv_fmax: float):
+    i = pl.program_id(0)                     # device-row block
+    ofu = tpa_ref[...] * clock_ref[...] * jnp.float32(inv_fmax)
+    rows = jax.lax.broadcasted_iota(jnp.int32, ofu.shape, 0) + i * block_d
+    cols = jax.lax.broadcasted_iota(jnp.int32, ofu.shape, 1) \
+        + pl.program_id(1) * spb
+    valid = ((rows < n_rows) & (cols < n_cols)).astype(ofu.dtype)
+    n = ofu.size
+    # digitize by comparison: bin = #edges ≤ v, minus one, clipped
+    ge = ofu.reshape(n, 1) >= edges_ref[...]             # (n, bins+1)
+    k = jnp.clip(ge.astype(jnp.int32).sum(axis=1) - 1, 0, bins - 1)
+    onehot = (k.reshape(n, 1)
+              == jax.lax.broadcasted_iota(jnp.int32, (n, bins), 1)) \
+        .astype(ofu.dtype) * valid.reshape(n, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+
+    hist_ref[...] += onehot.sum(axis=0, keepdims=True)
+    sum_ref[...] += (ofu * valid).sum().reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spb", "n_buckets", "inv_fmax", "interpret"))
+def _hist_pallas(tpa, clock, edges, *, spb, n_buckets, inv_fmax, interpret):
+    D, S = tpa.shape
+    bins = edges.shape[1] - 1
+    # one-hot tiles stay a few MB of VMEM: block_d * spb * bins * 4B.
+    # Interpreted runs pay python per grid step, not VMEM — trade tile
+    # memory for an ~8x smaller grid there.
+    block_d = max(8, (65536 if interpret else 8192) // max(spb, 1))
+    pad_d = -D % block_d
+    pad_s = n_buckets * spb - S
+    if pad_d or pad_s:
+        tpa = jnp.pad(tpa, ((0, pad_d), (0, pad_s)))
+        clock = jnp.pad(clock, ((0, pad_d), (0, pad_s)))
+    grid = (tpa.shape[0] // block_d, n_buckets)
+    hist, sums = pl.pallas_call(
+        functools.partial(_hist_kernel, n_rows=D, n_cols=S, spb=spb,
+                          block_d=block_d, bins=bins, inv_fmax=inv_fmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_d, spb), lambda i, j: (i, j)),
+                  pl.BlockSpec((block_d, spb), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, bins + 1), lambda i, j: (0, 0))],
+        out_specs=[pl.BlockSpec((1, bins), lambda i, j: (j, 0)),
+                   pl.BlockSpec((1, 1), lambda i, j: (j, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_buckets, bins), tpa.dtype),
+                   jax.ShapeDtypeStruct((n_buckets, 1), tpa.dtype)],
+        interpret=interpret,
+    )(tpa, clock, edges)
+    return hist, sums[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# XLA fallback: searchsorted + scatter-add over (bucket, bin) keys
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_buckets", "inv_fmax"))
+def _hist_xla(tpa, clock, edges, col_bucket, *, n_buckets, inv_fmax):
+    bins = edges.shape[0] - 1
+    ofu = tpa * clock * jnp.float32(inv_fmax)
+    k = jnp.clip(jnp.searchsorted(edges, ofu.ravel(), side="right")
+                 .astype(jnp.int32) - 1, 0, bins - 1)
+    seg = jnp.broadcast_to(col_bucket[None, :], ofu.shape).ravel()
+    hist = jnp.zeros(n_buckets * bins, ofu.dtype) \
+        .at[seg * bins + k].add(1.0).reshape(n_buckets, bins)
+    sums = jnp.zeros(n_buckets, ofu.dtype).at[seg].add(ofu.ravel())
+    return hist, sums
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def ofu_bucket_hist(tpa, clock, *, inv_fmax: float, edges: np.ndarray,
+                    col_bucket: np.ndarray, n_buckets: int,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None):
+    """Device-side fused ingest: (hist (B, bins), sums (B,)) f32 arrays.
+
+    col_bucket: (S,) 0-based LOCAL bucket row per scrape column (the
+    caller rebases absolute bucket indices).  use_pallas=None routes to
+    the pallas kernel on TPU (bucket-aligned columns required, else the
+    XLA scatter handles the ragged map) and to XLA elsewhere; pass True
+    to force the kernel (interpreted off-TPU).
+    """
+    edges = _edges_f32(edges)
+    col_bucket = np.asarray(col_bucket, np.int32)
+    spb = _aligned_spb(col_bucket, n_buckets)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas and spb is not None:
+        return _hist_pallas(
+            jnp.asarray(tpa), jnp.asarray(clock),
+            jnp.asarray(edges).reshape(1, -1), spb=spb,
+            n_buckets=n_buckets, inv_fmax=float(inv_fmax),
+            interpret=_interpret() if interpret is None else interpret)
+    return _hist_xla(jnp.asarray(tpa), jnp.asarray(clock),
+                     jnp.asarray(edges), jnp.asarray(col_bucket),
+                     n_buckets=n_buckets, inv_fmax=float(inv_fmax))
+
+
+def bucket_hist_ref(tpa, clock, *, inv_fmax: float, edges: np.ndarray,
+                    col_bucket: np.ndarray, n_buckets: int):
+    """NumPy oracle with the device paths' exact f32 arithmetic."""
+    edges = _edges_f32(edges)
+    bins = len(edges) - 1
+    tpa = np.asarray(tpa, np.float32)
+    clock = np.asarray(clock, np.float32)
+    ofu = tpa * clock * np.float32(inv_fmax)
+    k = np.clip(np.searchsorted(edges, ofu.ravel(), side="right") - 1,
+                0, bins - 1)
+    seg = np.broadcast_to(np.asarray(col_bucket, np.int32)[None, :],
+                          ofu.shape).ravel()
+    hist = np.zeros((n_buckets, bins), np.float32)
+    np.add.at(hist, (seg, k), np.float32(1.0))
+    sums = np.zeros(n_buckets, np.float32)
+    np.add.at(sums, seg, ofu.ravel())
+    return hist, sums

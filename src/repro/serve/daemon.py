@@ -90,11 +90,21 @@ class ServiceDaemon:
                  state_dir: Optional[str] = None, persist_every: int = 0,
                  tee_dir: Optional[str] = None,
                  tee_chunk_samples: int = 1024,
-                 clock=time.monotonic, sleep=None, pace: bool = True):
+                 clock=time.monotonic, sleep=None, pace: bool = True,
+                 on_round=None):
         """`clock`/`sleep` inject a time source (see `SimClock`).  The
         default real-clock sleep waits on the stop event, so `stop()`
         (e.g. wired to SIGTERM) interrupts an inter-round sleep
-        immediately instead of after up to `round_s` seconds."""
+        immediately instead of after up to `round_s` seconds.
+
+        on_round: optional callback invoked with each round's report
+        AFTER that round's store generation is published (and persisted,
+        when due) but before pacing — the synchronization point for
+        anything downstream of the publish: tests gate round advancement
+        on pollers having observed the new generation (a SimClock-paced
+        run costs no wall time, so free-running readers would otherwise
+        race the whole run), deployments emit per-round metrics.  May be
+        reassigned on a live daemon; takes effect next round."""
         if persist_every < 0:
             raise ValueError(f"persist_every={persist_every} must be >= 0")
         if persist_every and not state_dir:
@@ -113,6 +123,7 @@ class ServiceDaemon:
         self._clock = clock
         self._sleep = sleep
         self.pace = bool(pace)
+        self.on_round = on_round
         self._is_fleet = is_fleet
         self._churn_lock = threading.Lock()
         self._churn: list = []
@@ -323,6 +334,8 @@ class ServiceDaemon:
             if self.persist_every \
                     and self.rounds % self.persist_every == 0:
                 self.persist()
+            if self.on_round is not None:
+                self.on_round(reports[-1])
             if self.pace and not self.collector.done:
                 deadline = origin \
                     + (self.rounds - start_round) * self.round_s

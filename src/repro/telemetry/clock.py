@@ -31,6 +31,17 @@ class ClockModel:
         """Load-dependent OU mean; accepts a scalar or an ndarray duty."""
         return self.chip.f_max_mhz * (1.0 - self.throttle_frac * duty)
 
+    def ou_step_constants(self, dt_s: float) -> tuple[float, float]:
+        """(a, sd) of the exact one-step OU discretization at step dt_s:
+        f' = μ + (f − μ)·a + sd·N(0,1), with a = e^{−θ·dt} and
+        sd = σ·sqrt(1 − a²).  The ONE definition shared by the scalar
+        loop, the batched NumPy recurrence, and the jax backend's
+        `lax.scan` — backends may not drift apart on the discretization.
+        """
+        a = float(np.exp(-self.theta * dt_s))
+        sd = float(self.sigma_mhz * np.sqrt(max(1e-12, 1 - a * a)))
+        return a, sd
+
     def simulate(self, duty: np.ndarray, dt_s: float,
                  seed: int = 0) -> np.ndarray:
         """Per-interval clock trajectory given a duty-cycle trajectory.
@@ -42,9 +53,7 @@ class ClockModel:
         T = len(duty)
         f = np.empty(T)
         cur = self.mean_clock(float(duty[0]))
-        a = np.exp(-self.theta * dt_s)
-        # exact OU discretization
-        sd = self.sigma_mhz * np.sqrt(max(1e-12, 1 - a * a))
+        a, sd = self.ou_step_constants(dt_s)   # exact OU discretization
         noise = rng.standard_normal(T)
         f_min = self.chip.f_max_mhz * self.f_min_frac
         for t in range(T):
@@ -71,8 +80,7 @@ class ClockModel:
         dt = duty.dtype                   # scalar callers keep f64
         D, T = duty.shape
         rng = np.random.default_rng(seed)
-        a = np.exp(-self.theta * dt_s)
-        sd = self.sigma_mhz * np.sqrt(max(1e-12, 1 - a * a))
+        a, sd = self.ou_step_constants(dt_s)
         # time-major layout so every recurrence step touches contiguous
         # memory, with the non-recurrent terms (μ(1−a) + σ·dW) folded into
         # one precomputed drive array — the loop is 3 in-place ops per step.

@@ -211,6 +211,26 @@ def test_engine_params_default_not_shared():
     assert grid.tpa.shape == (2, 10)
 
 
+def test_simulate_devices_rejects_device_count_mismatch():
+    """Regression (ISSUE 6): n_devices=1 alongside 5 stragglers used to
+    silently simulate 5 devices; conflicting counts now raise, and each
+    argument alone still infers the other."""
+    prof = StepProfile(0.8, 2.0)
+    with pytest.raises(ValueError,
+                       match=r"n_devices=1 conflicts .*stragglers\)=5"):
+        simulate_devices(prof, duration_s=300, interval_s=30.0,
+                         n_devices=1, stragglers=np.ones(5))
+    grid = simulate_devices(prof, duration_s=300, interval_s=30.0,
+                            stragglers=np.full(5, 1.2), seed=0)
+    assert grid.tpa.shape == (5, 10)        # inferred from stragglers
+    grid = simulate_devices(prof, duration_s=300, interval_s=30.0,
+                            n_devices=3, seed=0)
+    assert grid.tpa.shape == (3, 10)        # unit stragglers materialized
+    grid = simulate_devices(prof, duration_s=300, interval_s=30.0,
+                            n_devices=2, stragglers=np.ones(2), seed=0)
+    assert grid.tpa.shape == (2, 10)        # agreeing counts still fine
+
+
 # ---------------------------------------------------------------------------
 # streaming rollup: buckets, percentiles, detector feeds
 # ---------------------------------------------------------------------------

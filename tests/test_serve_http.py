@@ -6,6 +6,7 @@ identical queries ride the generation ETag (304); error paths are
 honest JSON.
 """
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -61,19 +62,34 @@ def served(tmp_path):
 
 def test_end_to_end_concurrent_serving_matches_direct_readout(served):
     daemon, server = served
-    seen_gens, poll_errors = [], []
+    poll_errors = []
+    gen_lists = [[] for _ in range(3)]   # per-thread: appends stay ordered
 
-    def poller():
+    def poller(my_gens):
         client = FleetClient(server.url)
         while not done.is_set():
             try:
-                seen_gens.append(client.fleet()["generation"])
+                my_gens.append(client.fleet()["generation"])
                 client.alerts()
             except Exception as e:      # noqa: BLE001 — collected below
                 poll_errors.append(e)
 
+    # deterministic interleaving: a round may not advance until every
+    # poller has observed the generation it just published — under
+    # SimClock pacing costs no wall time, so free-running pollers could
+    # otherwise miss the whole run (the PR-6 flake)
+    def gate(_report):
+        target = daemon.store.generation
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            if all(g and g[-1] >= target for g in gen_lists):
+                return
+            time.sleep(0.001)
+
+    daemon.on_round = gate
     done = threading.Event()
-    threads = [threading.Thread(target=poller) for _ in range(3)]
+    threads = [threading.Thread(target=poller, args=(g,))
+               for g in gen_lists]
     for t in threads:
         t.start()
     reports = daemon.run()
@@ -82,9 +98,12 @@ def test_end_to_end_concurrent_serving_matches_direct_readout(served):
         t.join(timeout=10)
     assert not poll_errors
     assert len(reports) == 12
-    # pollers watched the generation advance while the daemon ran
-    assert seen_gens and seen_gens[-1] > seen_gens[0]
-    assert all(b >= a for a, b in zip(seen_gens, seen_gens[1:]))
+    # every poller watched the generation advance monotonically across
+    # the run: the gate pins its first observation to round 1's publish
+    # (gen ≤ 2) and its last at or past round 12's (gen 13)
+    for g in gen_lists:
+        assert g and g[-1] > g[0]
+        assert all(b >= a for a, b in zip(g, g[1:]))
 
     client = FleetClient(server.url)
     roll = daemon.collector.rollup

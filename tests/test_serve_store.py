@@ -4,6 +4,7 @@ without recomputing, publishes isolate readers from collector mutation,
 and every payload is strictly JSON-serializable (no NaN on the wire).
 """
 import json
+import threading
 
 import numpy as np
 import pytest
@@ -256,3 +257,56 @@ def test_plain_rollup_publishes_without_window():
     assert "window" not in fleet and "alltime" not in fleet
     gp = store.goodput()
     assert gp["jobs"][0]["ofu"] == pytest.approx(0.4)
+
+
+def test_stats_readout_never_mutates_shared_state():
+    """Regression (ISSUE 6): _stats used to pad lazily-grown scopes by
+    reassigning the SHARED per-scope arrays, so a read-only job_stats()
+    resized rollup internals — a data race for HTTP readers sharing one
+    published snapshot. Reads must pad locally."""
+    roll = StreamingRollup(bucket_s=10)
+    roll.observe("a", np.array([5.0]), np.array([0.4]), group="bf16")
+    roll.observe("b", np.array([95.0]), np.array([0.5]), group="bf16")
+    h_a = roll._hists[("job", "a")]
+    s_a = roll._sums[("job", "a")]
+    st = roll.job_stats("a")                 # short scope: needs padding
+    assert len(st.mean) == roll.n_buckets == 10
+    assert st.mean[0] == pytest.approx(0.4)
+    assert np.isnan(st.mean[1:]).all()
+    # ...but the rollup's own arrays were never resized or reassigned
+    assert roll._hists[("job", "a")] is h_a and h_a.shape[0] == 1
+    assert roll._sums[("job", "a")] is s_a and s_a.shape[0] == 1
+
+
+def test_concurrent_readout_hammer_on_published_rollup():
+    """Many reader threads hammering job/fleet stats on one shared
+    rollup (the FleetStore publish model) agree with the single-threaded
+    answer and never error — pins the _stats local-pad fix."""
+    roll = WindowedRollup(bucket_s=10, retain=50)
+    roll.observe("early", np.array([5.0, 15.0]), np.array([0.4, 0.5]),
+                 group="bf16")
+    for k in range(40):                       # grow well past "early"
+        roll.observe("late", np.array([5.0 + 10 * k]), np.array([0.3]),
+                     group="bf16")
+    ref_job = roll.job_stats("early")
+    ref_fleet = roll.fleet_stats()
+    errors = []
+
+    def reader():
+        try:
+            for _ in range(200):
+                st = roll.job_stats("early")
+                np.testing.assert_array_equal(st.mean, ref_job.mean)
+                np.testing.assert_array_equal(st.weight, ref_job.weight)
+                np.testing.assert_array_equal(roll.fleet_stats().weight,
+                                              ref_fleet.weight)
+        except Exception as e:                # noqa: BLE001 — collected
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors
+    assert roll._hists[("job", "early")].shape[0] < roll.n_buckets
