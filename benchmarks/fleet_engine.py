@@ -9,18 +9,45 @@ operating point (1,000 devices x 1 hour at 30 s scrapes).  The fused case
 runs a 600-job / ~10k-device sweep through `simulate_fleet` both ways
 (per-job loop vs one padded multi-job grid).  The collector case measures
 the continuous-monitoring loop's per-round overhead (scrape -> windowed
-ingest -> regression/divergence detect) for a 64-job fleet.  Emits BENCH
-json lines with the headline numbers for the driver.
+ingest -> regression/divergence detect) for a 64-job fleet.  The ingest
+case drives the horizontal write path (delta blobs -> sharded aggregator
+-> k-way reduce) at 10k-host scale against the npz pairwise baseline.
+
+Every case emits a BENCH json line for the driver AND lands in
+`BENCH_fleet.json` (path overridable via the env var of the same name):
+a machine-readable per-case {name, median, units, metrics} table next to
+the human CSV rows.
 """
 from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 
 import numpy as np
 
 from benchmarks.common import Row, timed
+
+_CASES: list[dict] = []
+
+
+def _bench(name: str, median: float, units: str, **metrics) -> None:
+    """Record one benchmark case: print the legacy BENCH line (the
+    driver greps for it) and collect the structured row for
+    `BENCH_fleet.json`."""
+    print("BENCH " + json.dumps({"name": name, **metrics}))
+    _CASES.append({"name": name, "median": median, "units": units,
+                   "metrics": metrics})
+
+
+def _write_json() -> str:
+    path = os.environ.get("BENCH_FLEET_JSON", "BENCH_fleet.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "suite": "fleet_engine",
+                   "cases": _CASES}, f, indent=2)
+        f.write("\n")
+    return path
 from repro.fleet.collector import Collector, CollectorConfig, JobStream
 from repro.fleet.engine import simulate_devices
 from repro.fleet.jobs import JobSpec, simulate_fleet
@@ -155,21 +182,205 @@ def run_jax(rows: list[Row] | None = None) -> list[Row]:
     ofu_jax = float(r_dev.fleet_stats(qs=()).mean[0])
     ofu_np = float(r_host.fleet_stats(qs=()).mean[0])
 
-    print("BENCH " + json.dumps({
-        "name": "fleet_engine_jax",
-        "devices": n_dev,
-        "hours": hours,
-        "jax_wall_s": round(us_jax / 1e6, 3),
-        "numpy_wall_s": round(us_np / 1e6, 3),
-        "jax_devsec_per_s": round(thr_jax),
-        "pallas_interpret": interp,
-        "ingest_pallas_samples_per_s": round(n_cells / (us_pl / 1e6)),
-        "ingest_xla_samples_per_s": round(n_cells / (us_xla / 1e6)),
-        "ingest_numpy_samples_per_s": round(n_cells / (us_host / 1e6)),
-        "ingest_device_route_wall_s": round(us_dev / 1e6, 3),
-        "first_bucket_ofu_jax": round(ofu_jax, 4),
-        "first_bucket_ofu_numpy": round(ofu_np, 4),
-    }))
+    _bench(
+        "fleet_engine_jax", round(thr_jax), "device_seconds_per_wall_s",
+        devices=n_dev,
+        hours=hours,
+        jax_wall_s=round(us_jax / 1e6, 3),
+        numpy_wall_s=round(us_np / 1e6, 3),
+        jax_devsec_per_s=round(thr_jax),
+        pallas_interpret=interp,
+        ingest_pallas_samples_per_s=round(n_cells / (us_pl / 1e6)),
+        ingest_xla_samples_per_s=round(n_cells / (us_xla / 1e6)),
+        ingest_numpy_samples_per_s=round(n_cells / (us_host / 1e6)),
+        ingest_device_route_wall_s=round(us_dev / 1e6, 3),
+        first_bucket_ofu_jax=round(ofu_jax, 4),
+        first_bucket_ofu_numpy=round(ofu_np, 4),
+    )
+    return rows
+
+
+def run_ingest(rows: list[Row] | None = None) -> list[Row]:
+    """Ingest tier at fleet scale (ISSUE 7): 10k hosts / 1M devices of
+    delta traffic through the sharded aggregator.
+
+    Each host pre-bins ~100 devices into an 8-bucket rollup and ships
+    two rounds of `delta_bytes()` blobs (round 2 is a true delta: only
+    the new bucket rows), plus a slice of duplicate redeliveries — the
+    at-least-once pattern.  Reported: ingest MB/s and blobs/s through
+    `IngestAggregator.submit`, k-way merges/s for the two-level
+    `fleet_rollup` reduce, and p99 dashboard read latency while ingest
+    and publishes keep running.  The decode+merge HEAD-TO-HEAD (npz
+    pairwise `from_bytes`+`merge` fold vs v2 submit + `merge_many`
+    reduce) runs on a subset (`FLEET_INGEST_NPZ_HOSTS`, default 1024) —
+    the npz path at 10k hosts would dominate the suite's wall clock —
+    and both sides are per-host rates, so the speedup transfers.
+    Correctness is checked against single-process ingestion of the
+    same observations (bucketwise identical).
+    """
+    from repro.serve import (FleetAPIServer, FleetClient, FleetStore,
+                             IngestAggregator)
+
+    rows = [] if rows is None else rows
+    n_hosts = int(os.environ.get("FLEET_INGEST_HOSTS", "10000"))
+    npz_hosts = min(int(os.environ.get("FLEET_INGEST_NPZ_HOSTS", "1024")),
+                    n_hosts)
+    dev_per_host = 100
+    bins, n_buckets, bucket_s = 64, 8, 300.0
+    half = n_buckets // 2
+    rng = np.random.default_rng(7)
+
+    # -- synthesize two rounds of per-host delta traffic ------------------
+    # and fold the SAME observations into one single-process reference
+    reference = StreamingRollup(bucket_s, bins=bins)
+    deltas1, deltas2 = [], []
+    sample_hosts = []                   # kept live for the head-to-head
+    for i in range(n_hosts):
+        roll = StreamingRollup(bucket_s, bins=bins)
+        job, grp = f"job-{i % 97}", ("bf16" if i % 2 else "fp8")
+        h1 = rng.poisson(3.0, (half, bins)).astype(float)
+        s1 = h1.sum(axis=1) * rng.uniform(0.2, 0.6)
+        roll.observe_hist(job, h1, s1, group=grp, weight=dev_per_host)
+        reference.observe_hist(job, h1, s1, group=grp,
+                               weight=dev_per_host)
+        deltas1.append(roll.delta_bytes(0))
+        acked = roll.generation
+        h2 = rng.poisson(3.0, (n_buckets - half, bins)).astype(float)
+        s2 = h2.sum(axis=1) * rng.uniform(0.2, 0.6)
+        roll.observe_hist(job, h2, s2, b0=half, group=grp,
+                          weight=dev_per_host)
+        reference.observe_hist(job, h2, s2, b0=half, group=grp,
+                               weight=dev_per_host)
+        deltas2.append(roll.delta_bytes(acked))
+        if i < npz_hosts:
+            sample_hosts.append(roll)
+
+    # -- decode+merge head-to-head: npz pairwise vs v2 submit+reduce ------
+    blobs_npz = [h.to_bytes() for h in sample_hosts]
+    blobs_v2 = [h.to_bytes_v2() for h in sample_hosts]
+
+    def _npz_pairwise():
+        acc = StreamingRollup(bucket_s, bins=bins)
+        for b in blobs_npz:
+            acc.merge(StreamingRollup.from_bytes(b))
+        return acc
+
+    def _v2_submit():
+        agg = IngestAggregator(n_shards=4)
+        for i, b in enumerate(blobs_v2):
+            agg.submit(f"h{i}", b)
+        return agg.fleet_rollup()
+
+    acc_npz, us_npz = timed(_npz_pairwise, repeat=3)
+    acc_v2, us_v2 = timed(_v2_submit, repeat=3)
+    speedup = us_npz / us_v2
+    npz_rate = npz_hosts / (us_npz / 1e6)
+    v2_rate = npz_hosts / (us_v2 / 1e6)
+    identical = all(
+        np.allclose(acc_npz._hists[s], acc_v2._hists[s],
+                    rtol=1e-9, atol=1e-12)
+        and np.allclose(acc_npz._sums[s], acc_v2._sums[s],
+                        rtol=1e-9, atol=1e-12)
+        for s in acc_npz._hists)
+    rows.append(Row(f"fleet_engine.ingest_npz_pairwise_{npz_hosts}host",
+                    us_npz, f"hosts_per_s={npz_rate:.0f}"))
+    rows.append(Row(f"fleet_engine.ingest_v2_submit_{npz_hosts}host",
+                    us_v2, f"hosts_per_s={v2_rate:.0f} "
+                    f"speedup={speedup:.1f}x identical={int(identical)}"))
+
+    # -- full-scale ingest: all hosts, both rounds, a duplicate slice -----
+    agg = IngestAggregator(n_shards=8, max_queue=64)
+    n_blobs = ingest_bytes = 0
+    t0 = time.perf_counter()
+    for round_blobs in (deltas1, deltas2):
+        for i, b in enumerate(round_blobs):
+            agg.submit(f"host-{i}", b)
+            n_blobs += 1
+            ingest_bytes += len(b)
+    for i in range(0, n_hosts, 37):     # at-least-once redelivery
+        agg.submit(f"host-{i}", deltas2[i])
+        n_blobs += 1
+        ingest_bytes += len(deltas2[i])
+    ingest_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fleet = agg.fleet_rollup()
+    reduce_s = time.perf_counter() - t0
+    mb_per_s = ingest_bytes / 1e6 / ingest_s
+    blobs_per_s = n_blobs / ingest_s
+    merges_per_s = n_hosts / reduce_s
+    fleet_identical = (
+        set(fleet._hists) == set(reference._hists) and all(
+            np.allclose(fleet._hists[s], reference._hists[s],
+                        rtol=1e-9, atol=1e-12)
+            and np.allclose(fleet._sums[s], reference._sums[s],
+                            rtol=1e-9, atol=1e-12)
+            for s in reference._hists))
+    stats = agg.stats()
+    rows.append(Row(f"fleet_engine.ingest_submit_{n_hosts}host",
+                    ingest_s * 1e6 / n_blobs,
+                    f"mb_per_s={mb_per_s:.1f} "
+                    f"blobs_per_s={blobs_per_s:.0f} "
+                    f"duplicates={stats['duplicates']}"))
+    rows.append(Row(f"fleet_engine.ingest_reduce_{n_hosts}host",
+                    reduce_s * 1e6,
+                    f"merges_per_s={merges_per_s:.0f} "
+                    f"identical={int(fleet_identical)}"))
+
+    # -- p99 dashboard read latency under live ingest ---------------------
+    store = FleetStore()
+    agg.publish(store, clock_s=0.0)
+    lat: list[float] = []
+    stop = threading.Event()
+    with FleetAPIServer(store, aggregator=agg) as server:
+        def _reader():
+            client = FleetClient(server.url, timeout_s=10.0)
+            while not stop.is_set():
+                t = time.perf_counter()
+                client.fleet()
+                lat.append(time.perf_counter() - t)
+
+        readers = [threading.Thread(target=_reader, daemon=True)
+                   for _ in range(4)]
+        for th in readers:
+            th.start()
+        t_end = time.perf_counter() + 2.0
+        i = writer_blobs = 0
+        while time.perf_counter() < t_end:
+            agg.submit(f"host-{i % n_hosts}", deltas2[i % n_hosts])
+            i += 1
+            writer_blobs += 1
+            if i % 2000 == 0:           # fresh generation mid-read-storm
+                agg.publish(store, clock_s=float(i))
+        stop.set()
+        for th in readers:
+            th.join(timeout=10)
+    lat_ms = np.sort(np.asarray(lat)) * 1e3
+    p99_ms = float(lat_ms[int(0.99 * (lat_ms.size - 1))])
+    p50_ms = float(lat_ms[lat_ms.size // 2])
+    rows.append(Row(f"fleet_engine.ingest_read_p99_{n_hosts}host",
+                    p99_ms * 1e3,
+                    f"p50_ms={p50_ms:.2f} p99_ms={p99_ms:.2f} "
+                    f"reads={lat_ms.size} "
+                    f"concurrent_blobs={writer_blobs}"))
+
+    _bench(
+        "ingest_tier", round(mb_per_s, 1), "MB_per_s",
+        hosts=n_hosts,
+        devices=n_hosts * dev_per_host,
+        blobs=n_blobs,
+        ingest_mb_per_s=round(mb_per_s, 1),
+        blobs_per_s=round(blobs_per_s),
+        merges_per_s=round(merges_per_s),
+        reduce_wall_s=round(reduce_s, 3),
+        decode_merge_speedup_x=round(speedup, 1),
+        npz_hosts_per_s=round(npz_rate),
+        v2_hosts_per_s=round(v2_rate),
+        duplicates=stats["duplicates"],
+        bucketwise_identical=bool(identical and fleet_identical),
+        p99_read_ms=round(p99_ms, 2),
+        p50_read_ms=round(p50_ms, 2),
+        concurrent_reads=int(lat_ms.size),
+    )
     return rows
 
 
@@ -205,14 +416,14 @@ def run() -> list[Row]:
                     f"wall_s={wall_s:.2f} ofu={tel.ofu * 100:.1f}% "
                     f"buckets={roll.n_buckets}"))
 
-    print("BENCH " + json.dumps({
-        "name": "fleet_engine",
-        "scalar_devsec_per_s": round(thr_scalar),
-        "vector_devsec_per_s": round(thr_vector),
-        "speedup_x": round(speedup, 1),
-        "fleet_1000dev_1h_wall_s": round(wall_s, 3),
-        "fleet_devsec_per_s": round(thr_full),
-    }))
+    _bench(
+        "fleet_engine", round(thr_full), "device_seconds_per_wall_s",
+        scalar_devsec_per_s=round(thr_scalar),
+        vector_devsec_per_s=round(thr_vector),
+        speedup_x=round(speedup, 1),
+        fleet_1000dev_1h_wall_s=round(wall_s, 3),
+        fleet_devsec_per_s=round(thr_full),
+    )
 
     # -- fused multi-job grid: 600 jobs / ~10k devices, one padded pass ----
     # interleaved (per-job, fused) pairs + median pair ratio, so machine
@@ -240,15 +451,16 @@ def run() -> list[Row]:
     rows.append(Row("fleet_engine.fused_600job_sweep", us_fused,
                     f"device_seconds_per_wall_s={thr_fused:.0f} "
                     f"speedup={fused_speedup:.1f}x devices={n_dev_total}"))
-    print("BENCH " + json.dumps({
-        "name": "fleet_engine_fused",
-        "jobs": len(specs),
-        "devices": n_dev_total,
-        "perjob_wall_s": round(us_perjob / 1e6, 3),
-        "fused_wall_s": round(us_fused / 1e6, 3),
-        "fused_speedup_x": round(fused_speedup, 1),
-        "fused_devsec_per_s": round(thr_fused),
-    }))
+    _bench(
+        "fleet_engine_fused", round(thr_fused),
+        "device_seconds_per_wall_s",
+        jobs=len(specs),
+        devices=n_dev_total,
+        perjob_wall_s=round(us_perjob / 1e6, 3),
+        fused_wall_s=round(us_fused / 1e6, 3),
+        fused_speedup_x=round(fused_speedup, 1),
+        fused_devsec_per_s=round(thr_fused),
+    )
 
     run_jax(rows)
 
@@ -280,14 +492,14 @@ def run() -> list[Row]:
                     f"samples_per_round={samples_round:.0f} "
                     f"device_seconds_per_wall_s={thr_col:.0f} "
                     f"alerts={sum(len(r.alerts) for r in reports)}"))
-    print("BENCH " + json.dumps({
-        "name": "fleet_collector",
-        "jobs": n_jobs,
-        "devices": n_jobs * n_dev_c,
-        "rounds": n_rounds,
-        "round_ms": round(us_round / 1e3, 2),
-        "collector_devsec_per_s": round(thr_col),
-    }))
+    _bench(
+        "fleet_collector", round(us_round / 1e3, 2), "ms_per_round",
+        jobs=n_jobs,
+        devices=n_jobs * n_dev_c,
+        rounds=n_rounds,
+        round_ms=round(us_round / 1e3, 2),
+        collector_devsec_per_s=round(thr_col),
+    )
 
     # -- trace store: columnar archive vs CSV, chunked replay throughput --
     # One day of a 16-device job at 30 s scrapes, replayed through the
@@ -337,17 +549,17 @@ def run() -> list[Row]:
                     f"samples_per_s={thr_chunk:.0f} bytes={ctr_b} "
                     f"compression={compression:.1f}x "
                     f"peak_resident_frac={resident_frac:.3f}"))
-    print("BENCH " + json.dumps({
-        "name": "trace_store",
-        "devices": n_dev_t,
-        "samples": n_cells,
-        "csv_bytes": csv_b,
-        "columnar_bytes": ctr_b,
-        "compression_x": round(compression, 1),
-        "csv_replay_samples_per_s": round(thr_csv),
-        "chunked_replay_samples_per_s": round(thr_chunk),
-        "peak_resident_frac": round(resident_frac, 4),
-    }))
+    _bench(
+        "trace_store", round(thr_chunk), "samples_per_s",
+        devices=n_dev_t,
+        samples=n_cells,
+        csv_bytes=csv_b,
+        columnar_bytes=ctr_b,
+        compression_x=round(compression, 1),
+        csv_replay_samples_per_s=round(thr_csv),
+        chunked_replay_samples_per_s=round(thr_chunk),
+        peak_resident_frac=round(resident_frac, 4),
+    )
 
     # -- serving layer: store query latency + HTTP requests/s -------------
     # The 64-job fixture from the collector case, published into a
@@ -422,15 +634,19 @@ def run() -> list[Row]:
     rows.append(Row("fleet_engine.serve_http_64job", us_http / n_http,
                     f"requests_per_s={rps_http:.0f} "
                     f"hits_304={client.hits_304}"))
-    print("BENCH " + json.dumps({
-        "name": "serve_query",
-        "jobs": n_jobs,
-        "store_queries_per_s_cold": round(qps_cold),
-        "store_queries_per_s": round(qps_warm),
-        "http_requests_per_s": round(rps_http),
-        "http_304_frac": round(client.hits_304 / max(client.requests, 1),
-                               3),
-    }))
+    _bench(
+        "serve_query", round(rps_http), "requests_per_s",
+        jobs=n_jobs,
+        store_queries_per_s_cold=round(qps_cold),
+        store_queries_per_s=round(qps_warm),
+        http_requests_per_s=round(rps_http),
+        http_304_frac=round(client.hits_304 / max(client.requests, 1), 3),
+    )
+
+    run_ingest(rows)
+
+    path = _write_json()
+    print(f"BENCH-JSON {path} cases={len(_CASES)}")
     return rows
 
 

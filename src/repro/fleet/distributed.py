@@ -58,9 +58,9 @@ def tree_reduce(rollups: Sequence, *, fanin: int = 2) -> StreamingRollup:
             seed = next((r for r in group
                          if getattr(r, "retain", None) is not None),
                         group[0])
-            acc = _empty_like(seed)
-            for r in group:
-                acc.merge(r)
+            # one vectorized k-way fold per group (falls back to the
+            # pairwise loop automatically when the group is windowed)
+            acc = _empty_like(seed).merge_many(group)
             nxt.append(acc)
         level = nxt
     return level[0]

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.ofu import hist_percentile, hist_percentile_grid, ofu_series
 from repro.core.peaks import DEFAULT_CHIP, ChipSpec
+from repro.fleet import wire
 
 _FLEET = "__fleet__"
 
@@ -103,6 +104,11 @@ class StreamingRollup:
         self._sums: dict = {}       # scope -> (B,) weighted value sums
         self._job_meta: dict = {}   # job_id -> dict (app_mfu, chips, ...)
         self.n_buckets = 0
+        #: monotone mutation counter: bumps once per ingest/merge, and
+        #: `_touched[scope][row]` remembers the generation that last
+        #: changed each bucket row — what `delta_bytes(since)` cuts on
+        self.generation = 0
+        self._touched: dict = {}    # scope -> (B,) int64 generation stamps
 
     def spawn_empty(self) -> "StreamingRollup":
         """A fresh rollup with this one's bucketing (reduction identity)."""
@@ -117,10 +123,13 @@ class StreamingRollup:
         if h is None or h.shape[0] < self.n_buckets:
             nh = np.zeros((self.n_buckets, self.bins))
             ns = np.zeros(self.n_buckets)
+            nt = np.zeros(self.n_buckets, dtype=np.int64)
             if h is not None:
                 nh[:h.shape[0]] = h
                 ns[:h.shape[0]] = self._sums[scope]
+                nt[:h.shape[0]] = self._touched[scope]
             self._hists[scope], self._sums[scope] = nh, ns
+            self._touched[scope] = nt
         return self._hists[scope], self._sums[scope]
 
     def _bucketize(self, t_s, ofu):
@@ -142,11 +151,15 @@ class StreamingRollup:
                 group: str = "unknown", weight: float = 1.0) -> None:
         """Fold OFU samples at times t_s into every scope this job hits."""
         v, b, k = self._bucketize(t_s, ofu)
-        b_needed = int(b.max()) + 1 if len(b) else 0
+        if not v.size:
+            return
+        self.generation += 1
+        b_needed = int(b.max()) + 1
         for scope in (("job", job_id), ("group", group), ("group", _FLEET)):
             h, s = self._scope_arrays(scope, b_needed)
             np.add.at(h, (b, k), weight)
             np.add.at(s, b, v * weight)
+            self._touched[scope][b] = self.generation
 
     def add_job(self, tel, *, group: str | None = None) -> np.ndarray:
         """Ingest a JobTelemetry: every sampled device's OFU series,
@@ -233,11 +246,13 @@ class StreamingRollup:
         if hist.shape[1] != self.bins:
             raise ValueError(f"histogram has {hist.shape[1]} bins, "
                              f"rollup has {self.bins}")
+        self.generation += 1
         b_needed = b0 + hist.shape[0]
         for scope in (("job", job_id), ("group", group), ("group", _FLEET)):
             h, s = self._scope_arrays(scope, b_needed)
             h[b0:b_needed] += hist * weight
             s[b0:b_needed] += np.asarray(sums) * weight
+            self._touched[scope][b0:b_needed] = self.generation
 
     # -- distribution: merge + wire format ----------------------------------
     def merge(self, other: "StreamingRollup") -> "StreamingRollup":
@@ -256,13 +271,70 @@ class StreamingRollup:
             raise ValueError("cannot merge a WindowedRollup into a plain "
                              "StreamingRollup (retention/eviction state "
                              "would be lost); merge the other way around")
+        self.generation += 1
         n = max(self.n_buckets, other.n_buckets)
         for scope, oh in other._hists.items():
             h, s = self._scope_arrays(scope, n)
             h[:oh.shape[0]] += oh
             s[:oh.shape[0]] += other._sums[scope]
+            self._touched[scope][:oh.shape[0]] = self.generation
         for jid, m in other._job_meta.items():
             self._job_meta.setdefault(jid, dict(m))
+        return self
+
+    def merge_many(self, others) -> "StreamingRollup":
+        """Fold MANY rollups in at once (in place; returns self) —
+        equivalent to a pairwise `merge` fold, but per scope the aligned
+        per-bucket arrays are stacked and reduced with one
+        `np.add.reduce` instead of N separate adds, and every scope is
+        grown to its final size exactly once instead of once per input.
+        The k-way reduction step `tree_reduce` and the ingest aggregator
+        stand on.
+
+        Windowed rollups (self or any input) fall back to the pairwise
+        loop — eviction alignment is inherently sequential.
+        """
+        others = [o for o in others if o is not None]
+        if not others:
+            return self
+        if getattr(self, "retain", None) is not None or any(
+                getattr(o, "retain", None) is not None for o in others):
+            for o in others:
+                self.merge(o)
+            return self
+        for o in others:
+            if (self.bucket_s != o.bucket_s or self.bins != o.bins
+                    or not np.array_equal(self.edges, o.edges)):
+                raise ValueError("cannot merge rollups with different "
+                                 "bucketing (bucket_s/bins/edges must "
+                                 "match)")
+        self.generation += 1
+        n = max([self.n_buckets] + [o.n_buckets for o in others])
+        # per scope: group inputs by row count so each group stacks into
+        # one contiguous reduction; chunked to bound the stack's memory
+        chunk = 512
+        per_scope: dict = {}
+        for o in others:
+            for scope, oh in o._hists.items():
+                per_scope.setdefault(scope, {}).setdefault(
+                    oh.shape[0], []).append((oh, o._sums[scope]))
+        for scope, by_rows in per_scope.items():
+            h, s = self._scope_arrays(scope, n)
+            for rows, parts in by_rows.items():
+                if len(parts) == 1:
+                    h[:rows] += parts[0][0]
+                    s[:rows] += parts[0][1]
+                else:
+                    for i in range(0, len(parts), chunk):
+                        blk = parts[i:i + chunk]
+                        h[:rows] += np.add.reduce(
+                            np.stack([p[0] for p in blk]))
+                        s[:rows] += np.add.reduce(
+                            np.stack([p[1] for p in blk]))
+            self._touched[scope][:max(by_rows)] = self.generation
+        for o in others:
+            for jid, m in o._job_meta.items():
+                self._job_meta.setdefault(jid, dict(m))
         return self
 
     def _snapshot_extra(self, meta: dict, arrays: dict) -> None:
@@ -289,11 +361,77 @@ class StreamingRollup:
         np.savez_compressed(buf, **arrays)
         return buf.getvalue()
 
+    # -- wire format v2: delta snapshots --------------------------------
+    def to_bytes_v2(self) -> bytes:
+        """Full snapshot on the zero-copy v2 wire (`fleet.wire`): raw
+        little-endian header + contiguous columns, decoded by
+        `np.frombuffer` views — no zip framing, no zlib.  `from_bytes`
+        accepts it (dispatch on magic); npz `to_bytes` remains the
+        self-describing compatibility format and the only one carrying
+        windowed retention state."""
+        return wire.encode(self, 0)
+
+    def delta_bytes(self, since_generation: int = 0) -> bytes:
+        """Ship only the bucket rows touched after `since_generation` —
+        O(new buckets) per round instead of O(history).
+
+        The blob carries `seq = self.generation`; rows hold the scope's
+        full CUMULATIVE histogram for that bucket (replace semantics),
+        so a receiver holding a mirror of the state at
+        `since_generation` applies it idempotently: duplicates are
+        detected by `seq`, retries need no dedup log.  `since=0` is a
+        full snapshot."""
+        return wire.encode(self, since_generation)
+
+    def apply_delta(self, blob) -> bool:
+        """Apply a v2 delta to this MIRROR of the sender's rollup.
+
+        Returns True when applied, False for a duplicate (the blob's
+        `seq` is not ahead of this mirror — at-least-once redelivery is
+        a no-op).  Raises ValueError on a sequence GAP (`since` ahead of
+        this mirror: a delta in between was lost; the sender must
+        re-encode from this mirror's generation) or a bucketing
+        mismatch."""
+        return self.apply_snapshot(wire.decode(blob))
+
+    def apply_snapshot(self, snap) -> bool:
+        """`apply_delta` after decode — the aggregator's entry point
+        (decode once outside the shard lock, apply under it)."""
+        if getattr(self, "retain", None) is not None:
+            raise ValueError("delta snapshots apply to plain "
+                             "StreamingRollup mirrors; windowed state "
+                             "travels via the npz format")
+        if snap.seq <= self.generation:
+            return False                       # duplicate delivery
+        if snap.since > self.generation:
+            raise ValueError(
+                f"delta gap: blob covers generations ({snap.since}, "
+                f"{snap.seq}] but this mirror is at {self.generation}; "
+                f"re-encode with delta_bytes({self.generation})")
+        if (self.bucket_s != snap.bucket_s or self.bins != snap.bins
+                or not np.array_equal(self.edges, snap.edges)):
+            raise ValueError("cannot apply a snapshot with different "
+                             "bucketing (bucket_s/bins/edges must match)")
+        if snap.n_buckets > self.n_buckets:
+            self.n_buckets = snap.n_buckets
+        for scope, idx, hist, sums in snap.scopes:
+            h, s = self._scope_arrays(scope, snap.n_buckets)
+            h[idx] = hist                     # REPLACE: rows carry the
+            s[idx] = sums                     # sender's cumulative state
+            self._touched[scope][idx] = snap.seq
+        for jid, m in snap.job_meta.items():
+            self._job_meta[jid] = dict(m)
+        self.generation = snap.seq
+        return True
+
     @classmethod
     def from_bytes(cls, blob: bytes) -> "StreamingRollup":
-        """Restore a snapshot; dispatches on the serialized kind, so a
-        reducer deserializes plain and windowed snapshots through the one
+        """Restore a snapshot; dispatches on the leading magic (v2 raw
+        vs npz zip) and on the serialized kind, so a reducer
+        deserializes plain, windowed, and v2 snapshots through the one
         entry point `tree_reduce` uses."""
+        if wire.is_v2(blob):
+            return wire.restore(blob)
         with np.load(io.BytesIO(blob)) as z:
             meta = json.loads(bytes(z["meta"]).decode())
             edges = z["edges"]
@@ -312,10 +450,16 @@ class StreamingRollup:
                                        lo=lo, hi=hi)
             roll.edges = edges.copy()
             roll.n_buckets = int(meta["n_buckets"])
+            # npz blobs predate generation stamps: every restored row
+            # counts as touched at generation 1, so a later
+            # delta_bytes(0) still ships the full restored state
+            roll.generation = 1
             for idx, key in enumerate(meta["scopes"]):
                 scope = tuple(key)
                 roll._hists[scope] = z[f"h{idx}"].copy()
                 roll._sums[scope] = z[f"s{idx}"].copy()
+                roll._touched[scope] = np.ones(
+                    roll._hists[scope].shape[0], dtype=np.int64)
             roll._job_meta = meta["job_meta"]
         return roll
 
@@ -473,6 +617,7 @@ class WindowedRollup(StreamingRollup):
                 self._ev_sum[scope] += float(s[:drop].sum())
             self._hists[scope] = h[drop:].copy()
             self._sums[scope] = s[drop:].copy()
+            self._touched[scope] = self._touched[scope][drop:].copy()
         self.bucket0 += rows
         self.n_buckets = max(self.n_buckets - rows, 0)
 
@@ -488,6 +633,7 @@ class WindowedRollup(StreamingRollup):
         v, b_abs, k = self._bucketize(t_s, ofu)
         if not v.size:
             return
+        self.generation += 1
         self._advance_to(int(b_abs.max()) + 1)
         live = b_abs >= self.bucket0
         rel = b_abs[live] - self.bucket0
@@ -497,6 +643,7 @@ class WindowedRollup(StreamingRollup):
             if rel.size:
                 np.add.at(h, (rel, k[live]), weight)
                 np.add.at(s, rel, v[live] * weight)
+                self._touched[scope][rel] = self.generation
             if not live.all():       # already past the horizon at ingest
                 self._ev_arrays(scope)
                 np.add.at(self._ev_hist[scope], k[~live], weight)
@@ -517,6 +664,7 @@ class WindowedRollup(StreamingRollup):
             raise ValueError(f"histogram has {hist.shape[1]} bins, "
                              f"rollup has {self.bins}")
         sums = np.asarray(sums)
+        self.generation += 1
         self._advance_to(b0 + B)
         cut = min(max(self.bucket0 - b0, 0), B)     # rows past the horizon
         live = B - cut
@@ -530,6 +678,7 @@ class WindowedRollup(StreamingRollup):
             if live:
                 h[rel0:rel0 + live] += hist[cut:] * weight
                 s[rel0:rel0 + live] += sums[cut:] * weight
+                self._touched[scope][rel0:rel0 + live] = self.generation
 
     # -- distribution ---------------------------------------------------
     def merge(self, other: StreamingRollup) -> "WindowedRollup":
@@ -550,6 +699,7 @@ class WindowedRollup(StreamingRollup):
                              f"different retention ({self.retain} vs "
                              f"{o_retain} buckets)")
         ob0 = other.bucket0
+        self.generation += 1
         self._advance_to(max(self.end_bucket, ob0 + other.n_buckets))
         for scope, oh in other._hists.items():
             osum = other._sums[scope]
@@ -564,6 +714,7 @@ class WindowedRollup(StreamingRollup):
             if live > 0:
                 h[rel0:rel0 + live] += oh[cut:]
                 s[rel0:rel0 + live] += osum[cut:]
+                self._touched[scope][rel0:rel0 + live] = self.generation
         for scope, eh in getattr(other, "_ev_hist", {}).items():
             self._ev_arrays(scope)
             self._ev_hist[scope] += eh

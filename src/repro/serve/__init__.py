@@ -4,9 +4,15 @@
 versioned query answers; `ServiceDaemon` runs a collector on a real
 wall clock (pacing, stream churn, snapshot persistence, recording tee);
 `FleetAPIServer`/`FleetClient` put a stdlib-only JSON dashboard API in
-front of it.  See docs/ARCHITECTURE.md § "The serving layer".
+front of it.  The WRITE half is `IngestAggregator` (sharded per-host
+delta mirrors behind `POST /v1/ingest`) with `IngestClient` shipping
+`delta_bytes()` blobs under capped-backoff retry.  See
+docs/ARCHITECTURE.md § "The serving layer" and § "The ingest tier".
 """
-from repro.serve.client import FleetAPIError, FleetClient  # noqa: F401
+from repro.serve.aggregator import (  # noqa: F401
+    Backpressure, IngestAggregator, SnapshotGap)
+from repro.serve.client import (  # noqa: F401
+    FleetAPIError, FleetClient, IngestClient, backoff_delays)
 from repro.serve.daemon import ServiceDaemon, SimClock  # noqa: F401
 from repro.serve.http import ApiError, FleetAPIServer  # noqa: F401
 from repro.serve.store import FleetStore, alert_payload  # noqa: F401

@@ -1,6 +1,6 @@
 """Stdlib-only JSON API over a `FleetStore` — the dashboard wire.
 
-Four endpoint families (all GET, all JSON):
+Five endpoint families (JSON in both directions except ingest blobs):
 
     /v1/fleet                    fleet OFU series (+ ?qs=10,50,90)
     /v1/jobs                     the monitored population
@@ -12,6 +12,15 @@ Four endpoint families (all GET, all JSON):
         kind=goodput             &healthy_ofu=0.40
         kind=divergence          &flag_rel_err=0.30
         kind=series              &scope=fleet|job|group&id=...&qs=...
+    /v1/ingest                   the WRITE half (needs an aggregator):
+        POST                     body = `StreamingRollup.delta_bytes()`
+                                 blob, `X-Fleet-Host: <host-id>` header;
+                                 200 {"applied", "acked", "shard"},
+                                 409 + {"acked"} on a sequence gap
+                                 (re-encode from `acked`), 429 +
+                                 `Retry-After` under shard backpressure
+        GET                      aggregator counters (hosts/applied/
+                                 duplicates/gaps/rejected per shard)
 
 Every response carries an `ETag` derived from the store GENERATION plus
 a per-process boot nonce (so validators never collide across daemon
@@ -35,6 +44,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib.parse import parse_qs, unquote, urlsplit
 
+from repro.serve.aggregator import Backpressure, SnapshotGap
 from repro.serve.store import FleetStore
 
 
@@ -137,7 +147,7 @@ def _query(store: FleetStore, params: dict) -> dict:
                    "top_regressions, goodput, divergence, or series)")
 
 
-def _make_handler(store: FleetStore):
+def _make_handler(store: FleetStore, aggregator=None):
     class Handler(BaseHTTPRequestHandler):
         server_version = "repro-fleet-serve/1"
         protocol_version = "HTTP/1.1"
@@ -146,7 +156,8 @@ def _make_handler(store: FleetStore):
             pass
 
         def _send(self, status: int, payload: dict,
-                  etag: Optional[str] = None) -> None:
+                  etag: Optional[str] = None,
+                  headers: Optional[dict] = None) -> None:
             try:
                 # the wire format is STRICT JSON: a NaN that slipped
                 # past the store's cleaning must fail here, not emit a
@@ -164,8 +175,14 @@ def _make_handler(store: FleetStore):
             self.send_header("Cache-Control", "no-cache")
             if etag is not None:
                 self.send_header("ETag", etag)
+            for name, val in (headers or {}).items():
+                self.send_header(name, val)
             self.end_headers()
             self.wfile.write(body)
+
+        def _is_ingest(self, path: str) -> bool:
+            return [unquote(p) for p in path.split("/") if p] \
+                == ["v1", "ingest"]
 
         def do_GET(self) -> None:
             sp = urlsplit(self.path)
@@ -176,7 +193,13 @@ def _make_handler(store: FleetStore):
             # the store's generation cache keeps the repeat-poll path a
             # dict lookup, so 304s stay cheap
             try:
-                payload = _route(store, sp.path, params)
+                if self._is_ingest(sp.path):
+                    if aggregator is None:
+                        raise ApiError(404, "no ingest tier configured "
+                                       "on this server")
+                    payload = aggregator.stats()
+                else:
+                    payload = _route(store, sp.path, params)
             except ApiError as e:
                 self._send(e.status, {"error": str(e), "path": self.path})
                 return
@@ -184,10 +207,14 @@ def _make_handler(store: FleetStore):
                 self._send(500, {"error": f"{type(e).__name__}: {e}",
                                  "path": self.path})
                 return
+            gen = payload.get("generation")
+            if gen is None:           # ingest stats: live counters, no ETag
+                self._send(200, payload)
+                return
             # the boot nonce keeps validators from a previous server
             # process (whose generations restarted at 0) from colliding
             # into false 304s after a daemon restart
-            etag = f'"gen-{store.boot}-{payload["generation"]}"'
+            etag = f'"gen-{store.boot}-{gen}"'
             if self.headers.get("If-None-Match") == etag:
                 self.send_response(304)
                 self.send_header("ETag", etag)
@@ -195,6 +222,52 @@ def _make_handler(store: FleetStore):
                 self.end_headers()
                 return
             self._send(200, payload, etag=etag)
+
+        def do_POST(self) -> None:
+            sp = urlsplit(self.path)
+            try:
+                length = int(self.headers.get("Content-Length") or 0)
+            except ValueError:
+                length = 0
+            # drain the body before answering anything, or the client's
+            # keep-alive connection desynchronizes on the next request
+            blob = self.rfile.read(length) if length else b""
+            try:
+                if not self._is_ingest(sp.path):
+                    raise ApiError(404, f"unknown POST path "
+                                   f"{sp.path!r} (want /v1/ingest)")
+                if aggregator is None:
+                    raise ApiError(404, "no ingest tier configured on "
+                                   "this server")
+                host = self.headers.get("X-Fleet-Host")
+                if not host:
+                    raise ApiError(400, "POST /v1/ingest needs an "
+                                   "X-Fleet-Host header")
+                if not blob:
+                    raise ApiError(400, "POST /v1/ingest needs a "
+                                   "delta-blob body")
+                out = aggregator.submit(host, blob)
+            except ApiError as e:
+                self._send(e.status, {"error": str(e), "path": self.path})
+                return
+            except Backpressure as e:
+                self._send(429, {"error": str(e),
+                                 "retry_after_s": e.retry_after_s},
+                           headers={"Retry-After":
+                                    f"{e.retry_after_s:g}"})
+                return
+            except SnapshotGap as e:
+                self._send(409, {"error": str(e), "host": e.host,
+                                 "acked": e.acked})
+                return
+            except ValueError as e:
+                self._send(400, {"error": str(e), "path": self.path})
+                return
+            except Exception as e:    # noqa: BLE001 — a handler must answer
+                self._send(500, {"error": f"{type(e).__name__}: {e}",
+                                 "path": self.path})
+                return
+            self._send(200, {"host": host, **out})
 
     return Handler
 
@@ -208,10 +281,11 @@ class FleetAPIServer:
     """
 
     def __init__(self, store: FleetStore, *, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, aggregator=None):
         self.store = store
+        self.aggregator = aggregator
         self.httpd = ThreadingHTTPServer((host, port),
-                                         _make_handler(store))
+                                         _make_handler(store, aggregator))
         self.host, self.port = self.httpd.server_address[:2]
         self._thread: Optional[threading.Thread] = None
 

@@ -1,0 +1,365 @@
+"""Ingest tier end-to-end: sharded aggregator, POST /v1/ingest, client
+backoff — delta blobs from many hosts must reduce to exactly the state
+single-process ingestion would have built, under duplicates, gaps,
+backpressure, and stalled sockets."""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.fleet.streaming import StreamingRollup
+from repro.serve import (Backpressure, FleetAPIError, FleetAPIServer,
+                         FleetClient, FleetStore, IngestAggregator,
+                         IngestClient, SnapshotGap, backoff_delays)
+
+BINS, BUCKET_S = 32, 300.0
+
+
+def _mk_host(seed, rounds=2, jobs=2):
+    """A host rollup plus the list of (job, hist, sums, b0, group)
+    observations that built it (to replay into a reference)."""
+    rng = np.random.default_rng(seed)
+    roll = StreamingRollup(BUCKET_S, bins=BINS)
+    obs = []
+    for r in range(rounds):
+        for j in range(jobs):
+            hist = rng.poisson(2.0, (2, BINS)).astype(float)
+            sums = hist.sum(axis=1) * rng.uniform(0.2, 0.6)
+            rec = (f"job-{j}", hist, sums, 2 * r,
+                   "bf16" if j % 2 else "fp8")
+            roll.observe_hist(rec[0], rec[1], rec[2], b0=rec[3],
+                              group=rec[4], weight=8)
+            obs.append(rec)
+    return roll, obs
+
+
+def _reference(all_obs):
+    ref = StreamingRollup(BUCKET_S, bins=BINS)
+    for job, hist, sums, b0, group in all_obs:
+        ref.observe_hist(job, hist, sums, b0=b0, group=group, weight=8)
+    return ref
+
+
+def _assert_matches(fleet, ref):
+    """Bucketwise equality, padding short scope arrays with the zero
+    rows they implicitly hold (reduction grows every scope to the
+    global bucket count; per-scope ingest only grows on touch)."""
+    assert set(fleet._hists) == set(ref._hists)
+
+    def grow(x, rows):
+        out = np.zeros((rows,) + x.shape[1:])
+        out[:x.shape[0]] = x
+        return out
+
+    for scope in ref._hists:
+        n = max(fleet._hists[scope].shape[0], ref._hists[scope].shape[0])
+        np.testing.assert_allclose(grow(fleet._hists[scope], n),
+                                   grow(ref._hists[scope], n),
+                                   rtol=1e-9, atol=1e-12,
+                                   err_msg=f"scope {scope}")
+        np.testing.assert_allclose(grow(fleet._sums[scope], n),
+                                   grow(ref._sums[scope], n),
+                                   rtol=1e-9, atol=1e-12)
+
+
+# -- aggregator (no HTTP) -------------------------------------------------
+def test_aggregator_totals_match_single_process():
+    agg = IngestAggregator(n_shards=4)
+    all_obs = []
+    for h in range(12):
+        roll, obs = _mk_host(h)
+        all_obs += obs
+        agg.submit(f"host-{h}", roll.to_bytes_v2())
+    _assert_matches(agg.fleet_rollup(), _reference(all_obs))
+    assert agg.hosts == 12
+
+
+def test_aggregator_delta_rounds_and_duplicates():
+    agg = IngestAggregator(n_shards=2)
+    roll = StreamingRollup(BUCKET_S, bins=BINS)
+    rng = np.random.default_rng(0)
+    acked = 0
+    blobs = []
+    for r in range(3):
+        hist = rng.poisson(2.0, (2, BINS)).astype(float)
+        roll.observe_hist("job-0", hist, hist.sum(axis=1), b0=2 * r)
+        blob = roll.delta_bytes(acked)
+        out = agg.submit("h", blob)
+        assert out["applied"] is True
+        acked = out["acked"]
+        blobs.append(blob)
+    # redeliver every round's blob: all duplicates, state unchanged
+    mirror = agg._shards[agg.shard_of("h")].mirrors["h"]
+    frozen = {s: mirror._hists[s].copy() for s in mirror._hists}
+    for blob in blobs:
+        assert agg.submit("h", blob)["applied"] is False
+    for s, h in frozen.items():
+        np.testing.assert_array_equal(mirror._hists[s], h)
+    _assert_matches(agg.fleet_rollup(), roll)
+    assert agg.stats()["duplicates"] == 3
+
+
+def test_aggregator_gap_then_full_resync():
+    agg = IngestAggregator(n_shards=1)
+    roll, _ = _mk_host(1, rounds=1)
+    cut = roll.generation
+    agg.submit("h", roll.to_bytes_v2())
+    # aggregator loses the mirror (restart); host keeps advancing
+    agg._shards[0].mirrors.clear()
+    roll.observe_hist("job-0", np.ones((1, BINS)), np.ones(1), b0=4)
+    with pytest.raises(SnapshotGap) as ei:
+        agg.submit("h", roll.delta_bytes(cut))
+    assert ei.value.acked == 0
+    assert agg.stats()["gaps"] == 1
+    # re-encode from the acked cursor -> applies, state is exact
+    out = agg.submit("h", roll.delta_bytes(ei.value.acked))
+    assert out["applied"] is True
+    _assert_matches(agg.fleet_rollup(), roll)
+
+
+def test_backpressure_when_shard_is_saturated():
+    agg = IngestAggregator(n_shards=1, max_queue=3, retry_after_s=0.07)
+    roll, _ = _mk_host(2)
+    blob = roll.to_bytes_v2()
+    shard = agg._shards[0]
+    done = []
+    with shard.lock:                   # stall applies; submits pile up
+        threads = [threading.Thread(
+            target=lambda i=i: done.append(agg.submit(f"h{i}", blob)),
+            daemon=True) for i in range(3)]
+        for t in threads:
+            t.start()
+        deadline = time.time() + 10
+        while shard.inflight < 3:
+            assert time.time() < deadline, "submits never queued"
+            time.sleep(0.002)
+        with pytest.raises(Backpressure) as ei:
+            agg.submit("h-overflow", blob)
+        assert ei.value.retry_after_s == 0.07
+        assert agg.stats()["rejected"] == 1
+    for t in threads:
+        t.join(timeout=10)
+    assert len(done) == 3              # the queued ones all landed
+    assert agg.hosts == 3
+
+
+def test_publish_feeds_the_read_path():
+    agg = IngestAggregator(n_shards=2)
+    all_obs = []
+    for h in range(4):
+        roll, obs = _mk_host(h)
+        all_obs += obs
+        agg.submit(f"host-{h}", roll.to_bytes_v2())
+    store = FleetStore()
+    agg.publish(store, clock_s=12.5)
+    series = store.fleet_series()
+    assert series["t_s"], "published fleet series is empty"
+    ref = _reference(all_obs).fleet_stats(qs=())
+    np.testing.assert_allclose(series["weight"], ref.weight)
+
+
+# -- HTTP layer -----------------------------------------------------------
+@pytest.fixture
+def served():
+    agg = IngestAggregator(n_shards=2, max_queue=8, retry_after_s=0.01)
+    store = FleetStore()
+    with FleetAPIServer(store, aggregator=agg) as server:
+        yield server, agg, store
+
+
+def test_http_ingest_end_to_end(served):
+    server, agg, store = served
+    all_obs, pushers = [], []
+    for h in range(6):
+        roll, obs = _mk_host(h, rounds=1)
+        all_obs += obs
+        pusher = IngestClient(server.url, f"host-{h}", roll,
+                              timeout_s=10.0)
+        out = pusher.push()
+        assert out["applied"] is True and out["acked"] == roll.generation
+        pushers.append((pusher, roll))
+    # second round of deltas through the same cursors
+    rng = np.random.default_rng(99)
+    for pusher, roll in pushers:
+        hist = rng.poisson(2.0, (1, BINS)).astype(float)
+        rec = ("job-0", hist, hist.sum(axis=1), 5, "bf16")
+        roll.observe_hist(rec[0], rec[1], rec[2], b0=rec[3],
+                          group=rec[4], weight=8)
+        all_obs.append(rec)
+        assert pusher.push()["applied"] is True
+    _assert_matches(agg.fleet_rollup(), _reference(all_obs))
+    # counters endpoint agrees
+    stats = FleetClient(server.url)._get("/v1/ingest")
+    assert stats["hosts"] == 6 and stats["applied"] == 12
+
+
+def test_http_duplicate_push_is_noop(served):
+    server, agg, _ = served
+    roll, _ = _mk_host(0, rounds=1)
+    pusher = IngestClient(server.url, "h", roll, timeout_s=10.0)
+    pusher.push()
+    acked = pusher.acked
+    pusher.acked = 0                   # stale cursor: full redelivery
+    out = pusher.push()
+    assert out["applied"] is False and pusher.acked == acked
+    assert agg.stats()["duplicates"] == 1
+
+
+def test_http_gap_recovery_is_transparent(served):
+    server, agg, _ = served
+    roll, _ = _mk_host(3, rounds=1)
+    pusher = IngestClient(server.url, "h", roll, timeout_s=10.0)
+    pusher.push()
+    agg._shards[agg.shard_of("h")].mirrors.clear()     # server restart
+    roll.observe_hist("job-0", np.ones((1, BINS)), np.ones(1), b0=4)
+    out = pusher.push()                # 409 -> resync -> success
+    assert out["applied"] is True
+    _assert_matches(agg.fleet_rollup(), roll)
+    assert agg.stats()["gaps"] == 1
+
+
+def test_http_backpressure_429_retry_after(served):
+    server, agg, _ = served
+    roll, _ = _mk_host(4, rounds=1)
+    sid = agg.shard_of("h")
+    shard = agg._shards[sid]
+    shard.inflight = agg.max_queue     # saturate without real traffic
+    slept = []
+
+    def unblock(delay):
+        slept.append(delay)
+        shard.inflight = 0             # pressure clears while we wait
+
+    pusher = IngestClient(server.url, "h", roll, timeout_s=10.0,
+                          retries=3, backoff_s=0.05, sleep=unblock)
+    out = pusher.push()
+    assert out["applied"] is True
+    assert pusher.backpressure_hits == 1
+    # the wait honoured the server's Retry-After (0.01) or the local
+    # backoff step (0.05), whichever is larger
+    assert slept == [0.05]
+    assert agg.stats()["rejected"] == 1
+
+
+def test_http_backpressure_gives_up_after_retries(served):
+    server, agg, _ = served
+    roll, _ = _mk_host(5, rounds=1)
+    shard = agg._shards[agg.shard_of("h")]
+    shard.inflight = agg.max_queue     # and never clears
+    slept = []
+    pusher = IngestClient(server.url, "h", roll, timeout_s=10.0,
+                          retries=2, backoff_s=0.05, sleep=slept.append)
+    with pytest.raises(FleetAPIError) as ei:
+        pusher.push()
+    assert ei.value.status == 429
+    assert slept == [0.05, 0.1]        # capped exponential schedule
+    shard.inflight = 0
+
+
+def test_http_post_without_host_header_is_400(served):
+    server, _, _ = served
+    import urllib.error
+    import urllib.request
+    req = urllib.request.Request(server.url + "/v1/ingest", data=b"x",
+                                 method="POST")
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=10)
+    assert ei.value.code == 400
+
+
+def test_http_post_corrupt_blob_is_400(served):
+    server, _, _ = served
+    import urllib.error
+    import urllib.request
+    req = urllib.request.Request(
+        server.url + "/v1/ingest", data=b"not a v2 blob at all",
+        method="POST", headers={"X-Fleet-Host": "h"})
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=10)
+    assert ei.value.code == 400
+
+
+def test_ingest_404_without_aggregator():
+    store = FleetStore()
+    with FleetAPIServer(store) as server:        # read-only deployment
+        import urllib.error
+        import urllib.request
+        req = urllib.request.Request(
+            server.url + "/v1/ingest", data=b"x", method="POST",
+            headers={"X-Fleet-Host": "h"})
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req, timeout=10)
+        assert ei.value.code == 404
+
+
+# -- backoff + stalled sockets (satellite: client timeout regression) -----
+def test_backoff_delays_schedule():
+    assert list(backoff_delays(5, base_s=0.05, cap_s=0.4)) == \
+        [0.05, 0.1, 0.2, 0.4, 0.4]
+    assert list(backoff_delays(0)) == []
+    with pytest.raises(ValueError):
+        list(backoff_delays(-1))
+    with pytest.raises(ValueError):
+        list(backoff_delays(2, base_s=0.0))
+
+
+@pytest.fixture
+def stalled_server():
+    """A socket that accepts connections and then says NOTHING — the
+    pathological peer a missing socket timeout would hang on forever."""
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(8)
+    srv.settimeout(0.1)
+    conns = []
+    stop = threading.Event()
+
+    def accept_loop():
+        while not stop.is_set():
+            try:
+                conn, _ = srv.accept()
+                conns.append(conn)     # hold it open, never respond
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+
+    t = threading.Thread(target=accept_loop, daemon=True)
+    t.start()
+    yield f"http://127.0.0.1:{srv.getsockname()[1]}"
+    stop.set()
+    t.join(timeout=5)
+    for c in conns:
+        c.close()
+    srv.close()
+
+
+def test_fleet_client_fails_fast_on_stalled_socket(stalled_server):
+    slept = []
+    client = FleetClient(stalled_server, timeout_s=0.2, retries=2,
+                         backoff_s=0.05, sleep=slept.append)
+    t0 = time.perf_counter()
+    with pytest.raises(FleetAPIError) as ei:
+        client.fleet()
+    wall = time.perf_counter() - t0
+    assert ei.value.status == 0
+    assert slept == [0.05, 0.1]        # both retries took the schedule
+    assert client.requests == 3
+    # 3 attempts x 0.2 s timeout + scheduling slack — NOT a hang
+    assert wall < 5.0
+
+
+def test_ingest_client_fails_fast_on_stalled_socket(stalled_server):
+    roll, _ = _mk_host(6, rounds=1)
+    slept = []
+    pusher = IngestClient(stalled_server, "h", roll, timeout_s=0.2,
+                          retries=1, backoff_s=0.05, sleep=slept.append)
+    t0 = time.perf_counter()
+    with pytest.raises(FleetAPIError) as ei:
+        pusher.push()
+    assert ei.value.status == 0
+    assert slept == [0.05]
+    assert time.perf_counter() - t0 < 5.0
+    assert pusher.acked == 0           # nothing was acked
