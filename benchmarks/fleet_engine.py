@@ -42,10 +42,24 @@ def _bench(name: str, median: float, units: str, **metrics) -> None:
 
 
 def _write_json() -> str:
+    """Merge this run's cases into BENCH_fleet.json BY NAME — the
+    scorecard suite (tools/fleet_scorecard.py) shares the file, and
+    whichever suite runs second must not clobber the other's rows."""
     path = os.environ.get("BENCH_FLEET_JSON", "BENCH_fleet.json")
+    doc = {"schema": 1, "suite": "fleet_engine", "cases": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev.get("cases"), list):
+                doc = prev
+        except (json.JSONDecodeError, OSError):
+            pass                 # corrupt file: rewrite from scratch
+    fresh = {c["name"] for c in _CASES}
+    doc["cases"] = [c for c in doc["cases"]
+                    if c.get("name") not in fresh] + _CASES
     with open(path, "w") as f:
-        json.dump({"schema": 1, "suite": "fleet_engine",
-                   "cases": _CASES}, f, indent=2)
+        json.dump(doc, f, indent=2)
         f.write("\n")
     return path
 from repro.fleet.collector import Collector, CollectorConfig, JobStream

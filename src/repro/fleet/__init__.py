@@ -26,15 +26,21 @@ _EXPORTS = {
     # defined in the telemetry layer — resolving it must not load the
     # simulator (engine re-exports it only for back-compat)
     "DeviceGrid": "repro.telemetry.scrape",
+    "CounterFault": "repro.fleet.engine",
     "EngineParams": "repro.fleet.engine",
     "JobSlot": "repro.fleet.engine",
+    "apply_faults": "repro.fleet.engine",
+    "fault_factors": "repro.fleet.engine",
     "simulate_devices": "repro.fleet.engine",
     "simulate_jobs_fused": "repro.fleet.engine",
     # jax backend — resolving it imports jax, so it stays lazy like
     # everything else here
     "simulate_jobs_jax": "repro.fleet.engine_jax",
     "FleetRollup": "repro.fleet.goodput",
+    "GoodputEvent": "repro.fleet.goodput",
+    "goodput_from_rollup": "repro.fleet.goodput",
     "rollup": "repro.fleet.goodput",
+    "scan_goodput": "repro.fleet.goodput",
     "JobSpec": "repro.fleet.jobs",
     "JobTelemetry": "repro.fleet.jobs",
     "build_profile": "repro.fleet.jobs",

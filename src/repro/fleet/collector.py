@@ -33,7 +33,12 @@ import numpy as np
 from repro.core.peaks import DEFAULT_CHIP, ChipSpec
 from repro.fleet.distributed import tree_reduce
 from repro.fleet.divergence import analyze_rollup
+from repro.fleet.goodput import scan_goodput
 from repro.fleet.regression import scan_rollup
+
+#: the fleet-scope pseudo job id goodput alerts carry (no single job
+#: owns a fleet-wide OFU drop)
+FLEET_SCOPE = "__fleet__"
 from repro.fleet.streaming import WindowedRollup
 from repro.telemetry.counters import (MAX_HW_AVG_WINDOW_S,
                                       check_scrape_interval)
@@ -262,6 +267,10 @@ class CollectorConfig:
     flag_rel_err: float = 0.30   # divergence threshold
     clear_rounds: int = 2        # alert hysteresis
     adaptive: Optional[AdaptiveConfig] = None   # None = fixed intervals
+    #: kwargs for `goodput.scan_goodput` (e.g. {"drop_threshold": 0.25,
+    #: "window": 4, "min_duration": 2}); None disables the fleet-wide
+    #: goodput drop detector (the default — fleet scans are opt-in)
+    goodput: Optional[dict] = None
 
     def __post_init__(self):
         if self.round_s <= 0:
@@ -329,9 +338,11 @@ class Collector:
         `WindowedRollup.from_bytes(snap)` plus the old collector's clock
         and round count, and `seek()` each replay source to where its
         predecessor's cursor stood — polling resumes mid-trace with the
-        retained window intact (alert-episode hysteresis state is NOT
-        part of the snapshot; an episode still open across the restart
-        re-fires once).
+        retained window intact.  The rollup snapshot does NOT carry the
+        alert log or episode hysteresis; restore those separately via
+        `restore_alert_state(alert_state())` (as `ServiceDaemon`
+        persistence does), or an episode still open across the restart
+        re-fires once.
 
         `on_grid(stream, grid)` is the per-poll round hook: called with
         every non-empty polled DeviceGrid BEFORE rollup ingestion — the
@@ -395,6 +406,42 @@ class Collector:
         """The windowed rollup's wire-format state (kilobytes)."""
         return self.rollup.to_bytes()
 
+    # -- alert history + episode hysteresis (restart persistence) -------
+    def alert_state(self) -> dict:
+        """JSON-safe snapshot of the alert log AND the deduper's open
+        episodes — what `ServiceDaemon.persist` writes so a restarted
+        daemon neither forgets fired alerts nor re-pages episodes it
+        already surfaced."""
+        return {
+            "alerts": [{"round_idx": a.round_idx, "t_s": a.t_s,
+                        "job_id": a.job_id, "kind": a.kind,
+                        "message": a.message,
+                        "factor": float(a.factor)
+                        if np.isfinite(a.factor) else None}
+                       for a in self.alerts],
+            "episodes": [[list(key), ep[0], ep[1]]
+                         for key, eps in self.deduper._active.items()
+                         for ep in eps],
+        }
+
+    def restore_alert_state(self, state: dict) -> None:
+        """Rebuild the alert log and open-episode hysteresis from
+        `alert_state()` output (the `ServiceDaemon.restore` path).  An
+        episode that was open at persist time is re-armed as open here,
+        so the detector re-seeing the same collapse next round refreshes
+        it silently instead of paging a duplicate."""
+        self.alerts = [
+            Alert(int(a["round_idx"]), float(a["t_s"]), a["job_id"],
+                  a["kind"], a["message"],
+                  factor=float("nan") if a.get("factor") is None
+                  else float(a["factor"]))
+            for a in state.get("alerts", ())]
+        active: dict = {}
+        for key, anchor, quiet in state.get("episodes", ()):
+            active.setdefault(tuple(key), []).append(
+                [None if anchor is None else int(anchor), int(quiet)])
+        self.deduper._active = active
+
     # -- one round ------------------------------------------------------
     def _collect(self) -> int:
         cfg = self.config
@@ -443,6 +490,19 @@ class Collector:
                         f"{r.factor:.2f}x OFU collapse "
                         f"({r.ref_ofu * 100:.1f}% -> {r.low_ofu * 100:.1f}%"
                         f", {state})", factor=r.factor))
+        if cfg.goodput is not None:
+            for ev in scan_goodput(self.rollup, **cfg.goodput):
+                anchor = self.rollup.bucket0 + ev.start_idx
+                if self.deduper.offer((FLEET_SCOPE, "goodput"),
+                                      anchor=anchor):
+                    state = "ongoing" if ev.end_idx is None else "recovered"
+                    fired.append(Alert(
+                        self.round_idx, self.clock_s, FLEET_SCOPE,
+                        "goodput",
+                        f"fleet OFU down {ev.drop_frac * 100:.0f}% "
+                        f"({ev.ref_ofu * 100:.1f}% -> "
+                        f"{ev.low_ofu * 100:.1f}%, {state})",
+                        factor=ev.drop_frac))
         rep = analyze_rollup(self.rollup, flag_rel_err=cfg.flag_rel_err,
                              empty_ok=True)
         if rep is not None:

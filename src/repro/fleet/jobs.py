@@ -39,6 +39,11 @@ class JobSpec:
     scrape_interval_s: float = 30.0
     events: Sequence[Event] = ()
     straggler_sigma: float = 0.0     # per-device step-time spread
+    #: post-hoc counter perturbations (`fleet.engine.CounterFault`) —
+    #: the scenario library's ground-truth injection point.  Unlike
+    #: `events`, faults never reach the generative model: they apply to
+    #: the finished grid via `apply_faults`, identically on every engine.
+    faults: Sequence = ()
     seed: int = 0
     chip: ChipSpec = DEFAULT_CHIP
     # remat=True is the §VI-C world-model case (hardware executes 4F while
@@ -184,6 +189,12 @@ def _prep_job(spec: JobSpec, max_devices: int):
 
 def _telemetry(spec: JobSpec, prof: StepProfile, app: float,
                app_exact: float, grid: DeviceGrid) -> JobTelemetry:
+    if spec.faults:
+        # post-hoc by design: every engine produces the same unperturbed
+        # grid (up to its usual equivalence), so the injected fault is
+        # EXACTLY the declared perturbation on all of them
+        from repro.fleet.engine import apply_faults
+        grid = apply_faults(grid, spec.faults)
     executed_tflops = sum(prof.flops_by_precision.values()) / 1e12
     return JobTelemetry(spec, grid, app, app_exact, prof.step_time_s,
                         executed_tflops)

@@ -83,6 +83,20 @@ def _json_list(a) -> list:
             for x in np.asarray(a, float).ravel()]
 
 
+def _ffill(mean: np.ndarray) -> np.ndarray:
+    """Forward-fill NaN gaps (leading NaNs take the first real value) —
+    the shared detector-input conditioning for per-bucket mean series."""
+    if len(mean):
+        good = ~np.isnan(mean)
+        if good.any():
+            idx = np.maximum.accumulate(
+                np.where(good, np.arange(len(mean)), -1))
+            first = int(np.argmax(good))
+            idx[idx < 0] = first
+            mean = mean[idx]
+    return mean
+
+
 class StreamingRollup:
     """Incremental fleet OFU aggregator over fixed time buckets.
 
@@ -517,15 +531,14 @@ class StreamingRollup:
         `regression.detect_regressions`.  fill=True forward-fills empty
         buckets so the detector never sees NaN gaps."""
         mean = self.job_stats(job_id, qs=()).mean.copy()
-        if fill and len(mean):
-            good = ~np.isnan(mean)
-            if good.any():
-                idx = np.maximum.accumulate(
-                    np.where(good, np.arange(len(mean)), -1))
-                first = int(np.argmax(good))
-                idx[idx < 0] = first
-                mean = mean[idx]
-        return mean
+        return _ffill(mean) if fill else mean
+
+    def fleet_ofu(self, *, fill: bool = True) -> np.ndarray:
+        """Fleet-wide per-bucket mean OFU series (chip-weighted across
+        every job), detector-ready like `job_ofu` — what the goodput
+        drop detector (`fleet.goodput.scan_goodput`) consumes."""
+        mean = self.fleet_stats(qs=()).mean.copy()
+        return _ffill(mean) if fill else mean
 
     def to_job_points(self):
         """Bridge to `divergence.analyze`: one JobPoint per ingested job

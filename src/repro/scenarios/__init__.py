@@ -1,0 +1,9 @@
+"""Scenario library + detector scorecard (see scenarios.library)."""
+from repro.scenarios.library import (  # noqa: F401
+    DETECTORS, SCENARIOS, GroundTruthEvent, Scenario, build,
+    scenario_names,
+)
+from repro.scenarios.scorecard import (  # noqa: F401
+    FLOORS, SCHEMA, DetectorScore, ScenarioRun, check_floors,
+    run_scenario, run_scorecard, score_alerts,
+)

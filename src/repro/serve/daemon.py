@@ -17,9 +17,11 @@ operational half, and this module is it:
     changes from any thread; the daemon applies them between rounds, so
     jobs join and leave a live fleet without a restart.
   * PERSISTENCE — every `persist_every` rounds the windowed rollup,
-    collector clock, and per-stream cursors are written atomically to
-    `state_dir`; `ServiceDaemon.restore()` rebuilds the daemon after a
-    process restart and replay sources `seek()` back to their cursors.
+    collector clock, per-stream cursors, alert history, and open
+    alert-episode hysteresis are written atomically to `state_dir`;
+    `ServiceDaemon.restore()` rebuilds the daemon after a process
+    restart, replay sources `seek()` back to their cursors, and an
+    episode that was open at the last persist does NOT re-page.
   * RECORDING TEE — with `tee_dir` set, every polled grid also appends
     to a per-job columnar `TraceWriter` (`<tee_dir>/<job_id>.ctr`),
     via the collector's `on_grid` round hook.  Tee manifests flush at
@@ -243,6 +245,7 @@ class ServiceDaemon:
             "cursors": {st.job_id: st.source.cursor_s
                         for st in self.collector.streams},
             "rollup_file": ROLLUP_NAME,
+            "alerts": self.collector.alert_state(),
         }
         # rollup first, manifest last: state.json always points at a
         # complete snapshot, whatever instant the process dies
@@ -258,10 +261,13 @@ class ServiceDaemon:
         """Rebuild a daemon from `persist()` output: restored windowed
         rollup + collector clock/round, and every stream whose persisted
         cursor is nonzero `seek()`ed back to it.  Pass fresh `streams`
-        (same job_ids) and the same `CollectorConfig`; alert-episode
-        hysteresis is not part of the snapshot (an episode still open
-        across the restart re-fires once — a page on daemon restart
-        beats a silent one)."""
+        (same job_ids) and the same `CollectorConfig`.  The alert log
+        and open-episode hysteresis restore too: the resumed collector
+        remembers every alert it already fired, and a collapse that was
+        being tracked at persist time refreshes its episode silently
+        instead of paging a duplicate on the first post-restart round.
+        (State persisted by a pre-alert-state daemon restores with an
+        empty log — the old re-fire-once behavior.)"""
         mf = os.path.join(state_dir, STATE_NAME)
         if not os.path.isfile(mf):
             raise ValueError(f"{state_dir!r} holds no daemon state "
@@ -293,6 +299,7 @@ class ServiceDaemon:
         col = Collector(streams, config, rollup=roll,
                         clock_s=float(state["clock_s"]),
                         round_idx=int(state["round_idx"]))
+        col.restore_alert_state(state.get("alerts", {}))
         daemon_kw.setdefault("state_dir", state_dir)
         return cls(col, **daemon_kw)
 

@@ -6,8 +6,8 @@ from repro.telemetry.counters import (  # noqa: F401
 )
 from repro.telemetry.scrape import DeviceGrid, ScrapeSeries, scrape  # noqa: F401
 from repro.telemetry.source import (  # noqa: F401
-    BackendSource, SimulatorSource, TelemetrySource, TraceReplaySource,
-    read_trace, write_trace,
+    BackendSource, GridSource, SimulatorSource, TelemetrySource,
+    TraceReplaySource, read_trace, write_trace,
 )
 from repro.telemetry.tracestore import (  # noqa: F401
     TraceReader, TraceWriter, read_archive, write_archive,

@@ -244,6 +244,51 @@ class BackendSource(TelemetrySource):
 
 
 @dataclass
+class GridSource(TelemetrySource):
+    """Replays an in-memory `DeviceGrid` with poll/cursor semantics.
+
+    The scenario scorecard's source: a fault-injected grid simulated up
+    front (`simulate_fleet` + `apply_faults`) replays through a live
+    `Collector` round-for-round, deterministically — same contract as
+    `TraceReplaySource` without a file.  Not retimable: the grid's
+    cadence is fixed.
+    """
+
+    grid: DeviceGrid
+
+    retimable = False
+    bounded = True               # a finite grid always runs out
+
+    @property
+    def interval_s(self) -> float:
+        return self.grid.interval_s
+
+    @property
+    def exhausted(self) -> bool:
+        times = self.grid.times_s
+        return not times.size or self.cursor_s >= float(times[-1]) - 1e-9
+
+    def seek(self, t_s: float) -> None:
+        """Reposition the replay cursor (collector snapshot restore)."""
+        if t_s < 0:
+            raise ValueError(f"seek target {t_s}s must be >= 0")
+        self._cursor_s = float(t_s)
+
+    def poll(self, duration_s: float) -> DeviceGrid:
+        if duration_s <= 0:
+            raise ValueError(f"poll duration {duration_s}s must be positive")
+        c = self.cursor_s
+        times = self.grid.times_s
+        i0, i1 = np.searchsorted(times, [c + 1e-9, c + duration_s + 1e-9])
+        sub = DeviceGrid(self.grid.interval_s, self.grid.tpa[:, i0:i1],
+                         self.grid.clock_mhz[:, i0:i1],
+                         t0_s=float(times[i0]) - self.grid.interval_s
+                         if i1 > i0 else c)
+        self._cursor_s = c + duration_s
+        return sub
+
+
+@dataclass
 class TraceReplaySource(TelemetrySource):
     """Replays recorded (t_s, device, tpa, clock_mhz) scrapes from disk.
 

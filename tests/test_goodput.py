@@ -1,0 +1,175 @@
+"""`fleet.goodput` coverage (ISSUE 8 satellite): the streaming
+`from_rollup` view is MERGE-CONSISTENT (goodput over a tree-reduced
+fleet of per-host rollups equals goodput over single-process ingest —
+property-tested), empty/all-idle rollups degrade to zeros rather than
+NaN, and `scan_goodput` finds sustained fleet-wide OFU drops while
+staying silent on healthy fleets.
+"""
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from repro.core.peaks import DEFAULT_CHIP
+from repro.fleet.distributed import host_partition, tree_reduce
+from repro.fleet.goodput import (FleetRollup, from_rollup,
+                                 goodput_from_rollup, rollup, scan_goodput)
+from repro.fleet.streaming import StreamingRollup, WindowedRollup
+from repro.telemetry.scrape import DeviceGrid
+
+F_MAX = DEFAULT_CHIP.f_max_mhz
+
+
+def _grid(tpa_rows, interval=60.0, t0=0.0, clock=None):
+    tpa = np.asarray(tpa_rows, float)
+    clk = np.full_like(tpa, F_MAX) if clock is None \
+        else np.asarray(clock, float)
+    return DeviceGrid(interval, tpa, clk, t0_s=t0)
+
+
+# ---------------------------------------------------------------------------
+# merge consistency: tree_reduce of per-host rollups == one-shot ingest
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 5), st.integers(2, 12),
+       st.integers(0, 10 ** 6), st.booleans())
+def test_from_rollup_is_merge_consistent(n_jobs, n_hosts, n_samples, seed,
+                                         windowed):
+    rng = np.random.default_rng(seed)
+    make = (lambda: WindowedRollup(60.0, retain=8, bins=32)) if windowed \
+        else (lambda: StreamingRollup(60.0, bins=32))
+    single = make()
+    hosts = [make() for _ in range(n_hosts)]
+    for j in range(n_jobs):
+        n_dev = n_hosts * int(rng.integers(1, 3))
+        tpa = rng.uniform(0.0, 1.0, size=(n_dev, n_samples))
+        clock = rng.uniform(0.6, 1.0, size=(n_dev, n_samples)) * F_MAX
+        grid = _grid(tpa, clock=clock)
+        app_mfu = float(rng.uniform(0.1, 0.5)) if j % 2 == 0 else None
+        kw = dict(app_mfu=app_mfu, arch="a", group="bf16")
+        chips = 8 * (j + 1)
+        single.add_grid(f"job-{j}", grid, chips=chips, **kw)
+        # shard the DEVICE rows over hosts, as a per-host collector
+        # would; each host claims its share of the job's chip footprint
+        # (per-sample weight chips/n_dev on both sides)
+        per_dev = chips / n_dev
+        for h, rows in enumerate(host_partition(list(range(n_dev)),
+                                                n_hosts)):
+            if not rows:
+                continue
+            sub = _grid(tpa[rows], clock=clock[rows])
+            hosts[h].add_grid(f"job-{j}", sub,
+                              chips=per_dev * len(rows), **kw)
+    reduced = tree_reduce([h.to_bytes() for h in hosts])
+    a = from_rollup(single)
+    b = from_rollup(reduced)
+    assert a.chip_hours == pytest.approx(b.chip_hours, rel=1e-9)
+    assert a.weighted_ofu == pytest.approx(b.weighted_ofu, rel=1e-6)
+    assert a.app_mfu_coverage == pytest.approx(b.app_mfu_coverage,
+                                               rel=1e-9)
+    assert [j for j, _ in a.waste_ranking] \
+        == [j for j, _ in b.waste_ranking]
+    for (_, wa), (_, wb) in zip(a.waste_ranking, b.waste_ranking):
+        assert wa == pytest.approx(wb, rel=1e-6, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# degenerate inputs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make", [
+    lambda: StreamingRollup(60.0), lambda: WindowedRollup(60.0, retain=4)])
+def test_from_rollup_empty_is_zero_not_nan(make):
+    fr = from_rollup(make())
+    assert fr.chip_hours == 0.0
+    assert fr.weighted_ofu == 0.0 and np.isfinite(fr.weighted_ofu)
+    assert fr.app_mfu_coverage == 0.0
+    assert fr.ofu_coverage == 1.0 and fr.waste_ranking == []
+
+
+def test_from_rollup_all_idle_buckets():
+    roll = WindowedRollup(60.0, retain=8)
+    roll.add_grid("idle", _grid(np.zeros((2, 6))), chips=4)
+    fr = from_rollup(roll, healthy_ofu=0.4)
+    assert fr.chip_hours > 0
+    assert fr.weighted_ofu == 0.0
+    # a fully idle job is 100% recoverable waste
+    (jid, waste) = fr.waste_ranking[0]
+    assert jid == "idle" and waste == pytest.approx(fr.chip_hours)
+
+
+def test_from_rollup_validates_healthy_ofu():
+    roll = StreamingRollup(60.0)
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="healthy_ofu"):
+            from_rollup(roll, healthy_ofu=bad)
+
+
+def test_batch_rollup_empty_fleet():
+    fr = rollup([])
+    assert isinstance(fr, FleetRollup)
+    assert fr.chip_hours == 0.0 and fr.weighted_ofu == 0.0
+
+
+def test_goodput_from_rollup_is_the_package_alias():
+    assert goodput_from_rollup is from_rollup
+    import repro.fleet as fleet
+    assert fleet.goodput_from_rollup is from_rollup
+
+
+# ---------------------------------------------------------------------------
+# scan_goodput: the fleet-wide drop detector
+# ---------------------------------------------------------------------------
+def _fleet_roll(levels, per_bucket=4, interval=60.0, bucket_s=240.0):
+    """One job whose per-bucket OFU follows `levels` (clock at f_max so
+    OFU == tpa)."""
+    roll = WindowedRollup(bucket_s, retain=len(levels))
+    tpa = np.repeat(np.asarray(levels, float),
+                    per_bucket)[None, :]
+    roll.add_grid("j", _grid(tpa, interval=interval))
+    return roll
+
+
+def test_scan_goodput_detects_a_sustained_drop():
+    roll = _fleet_roll([0.5] * 8 + [0.2] * 4)
+    (ev,) = scan_goodput(roll, drop_threshold=0.25, window=4,
+                         min_duration=2)
+    # detector convention: start = trigger - min_duration + 1, and the
+    # reported low averages the sustain window (first point straddles)
+    assert ev.start_idx in (7, 8) and ev.end_idx is None
+    assert ev.drop_frac == pytest.approx(0.55, abs=0.1)
+    assert ev.ref_ofu == pytest.approx(0.5, abs=0.02)
+    assert 0.15 < ev.low_ofu < 0.3
+
+
+def test_scan_goodput_recovered_drop_has_end():
+    roll = _fleet_roll([0.5] * 6 + [0.1] * 3 + [0.5] * 3)
+    (ev,) = scan_goodput(roll, drop_threshold=0.25, window=4,
+                         min_duration=2)
+    assert ev.start_idx in (5, 6) and ev.end_idx is not None
+
+
+def test_scan_goodput_silent_on_healthy_and_empty():
+    assert scan_goodput(_fleet_roll([0.5] * 12)) == []
+    # a drop smaller than the threshold stays silent too
+    assert scan_goodput(_fleet_roll([0.5] * 8 + [0.45] * 4),
+                        drop_threshold=0.25) == []
+    assert scan_goodput(WindowedRollup(240.0, retain=8)) == []
+
+
+def test_scan_goodput_validates_threshold():
+    roll = _fleet_roll([0.5] * 8)
+    for bad in (0.0, 1.0, -0.5, 2.0):
+        with pytest.raises(ValueError, match="drop_threshold"):
+            scan_goodput(roll, drop_threshold=bad)
+
+
+def test_fleet_ofu_forward_fills_gap_buckets():
+    roll = WindowedRollup(60.0, retain=12)
+    # two grids with a 3-bucket silence between them
+    roll.add_grid("j", _grid(np.full((1, 4), 0.5), interval=60.0, t0=0.0))
+    roll.add_grid("j", _grid(np.full((1, 2), 0.3), interval=60.0,
+                             t0=7 * 60.0))
+    filled = roll.fleet_ofu()
+    assert not np.isnan(filled).any()
+    np.testing.assert_allclose(filled[4:7], 0.5)      # held, not NaN
+    raw = roll.fleet_ofu(fill=False)
+    assert np.isnan(raw[4:7]).all()

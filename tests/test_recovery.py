@@ -1,0 +1,124 @@
+"""`fleet.recovery` wake-up (ISSUE 8 satellite): the observe() policy
+(absolute floor, sustained relative regression, cooldown, callback) and
+the new `consume_alerts` collector integration — each collector alert
+episode maps to AT MOST one recovery action, idempotently.
+"""
+import numpy as np
+import pytest
+
+from repro.fleet.collector import Alert
+from repro.fleet.recovery import RecoveryService, StragglerMonitor
+from repro.scenarios import build, run_scenario
+
+
+# ---------------------------------------------------------------------------
+# observe(): the service's own sustained-collapse policy
+# ---------------------------------------------------------------------------
+def _feed(svc, job, values):
+    return [svc.observe(job, v) for v in values]
+
+
+def test_observe_fires_on_absolute_floor():
+    svc = RecoveryService(abs_floor=0.02, sustain_samples=3)
+    out = _feed(svc, "j", [0.4] * 6 + [0.01] * 3)
+    fired = [a for a in out if a is not None]
+    assert len(fired) == 1
+    assert fired[0].reason == "ofu_below_floor"
+    assert fired[0].factor == float("inf")
+
+
+def test_observe_fires_on_sustained_regression_not_blips():
+    svc = RecoveryService(factor_threshold=2.0, sustain_samples=3,
+                          cooldown_samples=100)
+    # a single-sample dip is not sustained
+    out = _feed(svc, "j", [0.4] * 8 + [0.1] + [0.4] * 4)
+    assert all(a is None for a in out)
+    # a sustained 4x collapse is
+    out = _feed(svc, "k", [0.4] * 8 + [0.1] * 5)
+    fired = [a for a in out if a is not None]
+    assert len(fired) == 1
+    assert fired[0].reason == "sustained_regression"
+    assert fired[0].factor == pytest.approx(4.0, rel=0.25)
+
+
+def test_observe_cooldown_then_rearm():
+    svc = RecoveryService(abs_floor=0.05, sustain_samples=2,
+                          cooldown_samples=6)
+    out = _feed(svc, "j", [0.4] * 4 + [0.01] * 12)
+    idx = [i for i, a in enumerate(out) if a is not None]
+    assert len(idx) >= 2                       # re-fires after cooldown
+    assert idx[1] - idx[0] >= 6                # but never inside it
+
+
+def test_observe_callback_fires_exactly_once_per_action():
+    calls = []
+    svc = RecoveryService(abs_floor=0.05, sustain_samples=2,
+                          cooldown_samples=10 ** 6,
+                          on_recover=calls.append)
+    _feed(svc, "j", [0.4] * 4 + [0.01] * 10)
+    assert len(calls) == 1
+    assert calls[0] is svc.actions[0]
+
+
+# ---------------------------------------------------------------------------
+# consume_alerts(): downstream of the collector's deduper
+# ---------------------------------------------------------------------------
+def _alert(job="j", factor=2.5, kind="regression", round_idx=3,
+           t_s=900.0, msg="2.50x OFU collapse"):
+    return Alert(round_idx, t_s, job, kind, msg, factor=factor)
+
+
+def test_consume_alerts_is_idempotent_under_refeed():
+    svc = RecoveryService()
+    log = [_alert()]
+    assert len(svc.consume_alerts(log)) == 1
+    # re-feeding the append-only log (as a per-round driver would) is a
+    # no-op; a NEW alert in the grown log still fires
+    log.append(_alert(round_idx=7, t_s=2100.0))
+    again = svc.consume_alerts(log)
+    assert len(again) == 1 and again[0].at_sample == 7
+    assert len(svc.actions) == 2
+
+
+def test_consume_alerts_filters_kind_and_factor():
+    svc = RecoveryService(min_alert_factor=2.0)
+    actions = svc.consume_alerts([
+        _alert(kind="divergence"),             # not a regression
+        _alert(job="wobble", factor=1.6),      # below min_alert_factor
+        _alert(job="nanjob", factor=float("nan")),
+        _alert(job="dead", factor=3.0),
+    ])
+    assert [a.job_id for a in actions] == ["dead"]
+    assert actions[0].reason == "collector_regression"
+
+
+def test_consume_alerts_fires_callback_once_per_episode():
+    calls = []
+    svc = RecoveryService(on_recover=calls.append)
+    log = [_alert()]
+    svc.consume_alerts(log)
+    svc.consume_alerts(log)
+    svc.consume_alerts(log)
+    assert len(calls) == 1
+
+
+def test_recovery_closes_the_loop_on_the_paper_scenario():
+    """End-to-end: replay the 2.5x regression scenario through the live
+    collector, feed its alert log to the recovery service — exactly one
+    restart of exactly the faulted job, idempotent per round."""
+    sc = build("gloo_regression_2p5x")
+    run = run_scenario(sc)
+    restarts = []
+    svc = RecoveryService(min_alert_factor=2.0,
+                          on_recover=lambda a: restarts.append(a.job_id))
+    for _ in range(3):                         # one call per "round"
+        svc.consume_alerts(run.alerts)
+    assert restarts == ["allreduce-7b"]
+    assert svc.actions[0].factor == pytest.approx(2.5, rel=0.2)
+
+
+def test_straggler_monitor_flags_the_outlier():
+    rng = np.random.default_rng(0)
+    tpa = 0.42 + 0.01 * rng.standard_normal(16)   # healthy spread
+    tpa[11] = 0.02
+    assert StragglerMonitor().flag(tpa) == [11]

@@ -5,13 +5,15 @@ continue equivalence through the FleetStore, and the crash-safe
 recording tee (a killed daemon leaves replayable archives up to the
 last persistence point; a restored one continues them gaplessly).
 """
+import json
 import os
 import threading
 
 import numpy as np
 import pytest
 
-from repro.fleet.collector import Collector, CollectorConfig, JobStream
+from repro.fleet.collector import (Alert, Collector, CollectorConfig,
+                                   JobStream)
 from repro.fleet.engine import simulate_devices
 from repro.fleet.streaming import WindowedRollup
 from repro.serve.daemon import ServiceDaemon, SimClock
@@ -210,6 +212,72 @@ def test_persist_restore_continue_matches_uninterrupted_run(tmp_path):
             for a in straight.store.alerts()["alerts"]} \
         == {(a["job_id"], a["kind"])
             for a in resumed.store.alerts()["alerts"]}
+
+
+def test_alert_history_survives_kill9_without_duplicate_pages(tmp_path):
+    """ISSUE 8 satellite: alerts fired BEFORE a crash must still be in
+    the restored daemon's log, and an episode that was open at the last
+    persist must NOT re-page when the restarted detector sees the same
+    collapse again — the restarted alert log equals the uninterrupted
+    run's exactly."""
+    path, _ = _archive(tmp_path)           # regression from t=1800s on
+    clk = SimClock()
+    straight = ServiceDaemon(Collector(_replay_streams(path), _cfg()),
+                             clock=clk.monotonic, sleep=clk.sleep)
+    straight.run()
+    want = straight.collector.alerts
+    first_round = min(a.round_idx for a in want
+                      if a.kind == "regression")
+
+    state = str(tmp_path / "state")
+    clk = SimClock()
+    first = ServiceDaemon(Collector(_replay_streams(path), _cfg()),
+                          state_dir=state, persist_every=1,
+                          clock=clk.monotonic, sleep=clk.sleep)
+    # run PAST the first regression page, then kill -9 (no close():
+    # persist_every=1 made every completed round a restart point)
+    first.run(n_rounds=first_round + 2)
+    assert any(a.kind == "regression" for a in first.collector.alerts)
+
+    resumed = ServiceDaemon.restore(state, _replay_streams(path), _cfg(),
+                                    clock=clk.monotonic, sleep=clk.sleep)
+    # the pre-crash log is already there at restore time
+    assert [(a.round_idx, a.job_id, a.kind, a.message)
+            for a in resumed.collector.alerts] \
+        == [(a.round_idx, a.job_id, a.kind, a.message)
+            for a in first.collector.alerts]
+    resumed.run()
+    resumed.close()
+    # ...and the finished log matches the uninterrupted run alert for
+    # alert: nothing lost, nothing paged twice
+    assert [(a.round_idx, a.job_id, a.kind, a.message) for a in want] \
+        == [(a.round_idx, a.job_id, a.kind, a.message)
+            for a in resumed.collector.alerts]
+    # the HTTP-facing store agrees
+    assert straight.store.alerts()["alerts"] \
+        == resumed.store.alerts()["alerts"]
+
+
+def test_collector_alert_state_roundtrip():
+    """Collector-level: alert_state()/restore_alert_state() round-trip
+    the log (NaN factors included) and the open-episode hysteresis."""
+    src = Collector([_sim_stream("a", duration_s=600)], _cfg())
+    src.alerts = [
+        Alert(3, 900.0, "a", "regression", "2.5x collapse", factor=2.5),
+        Alert(4, 1200.0, "a", "divergence", "audit", factor=float("nan")),
+    ]
+    src.deduper._active = {("a", "regression"): [[7, 0]],
+                           ("a", "divergence"): [[None, 1]]}
+    state = json.loads(json.dumps(src.alert_state()))  # JSON-safe
+    dst = Collector([_sim_stream("a", duration_s=600)], _cfg())
+    dst.restore_alert_state(state)
+    assert [(a.round_idx, a.t_s, a.job_id, a.kind, a.message)
+            for a in dst.alerts] \
+        == [(a.round_idx, a.t_s, a.job_id, a.kind, a.message)
+            for a in src.alerts]
+    assert dst.alerts[0].factor == 2.5
+    assert np.isnan(dst.alerts[1].factor)
+    assert dst.deduper._active == src.deduper._active
 
 
 def test_restore_rejects_missing_state_and_unseekable_sources(tmp_path):
