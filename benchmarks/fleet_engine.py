@@ -20,48 +20,25 @@ the human CSV rows.
 """
 from __future__ import annotations
 
-import json
 import os
 import threading
 import time
 
 import numpy as np
 
-from benchmarks.common import Row, timed
+from benchmarks.common import Row, bench_case, merge_bench_json, timed
 
 _CASES: list[dict] = []
 
 
 def _bench(name: str, median: float, units: str, **metrics) -> None:
-    """Record one benchmark case: print the legacy BENCH line (the
-    driver greps for it) and collect the structured row for
-    `BENCH_fleet.json`."""
-    print("BENCH " + json.dumps({"name": name, **metrics}))
-    _CASES.append({"name": name, "median": median, "units": units,
-                   "metrics": metrics})
+    """Record one benchmark case (BENCH line + structured row for
+    `BENCH_fleet.json` — shared plumbing in benchmarks.common)."""
+    bench_case(_CASES, name, median, units, **metrics)
 
 
 def _write_json() -> str:
-    """Merge this run's cases into BENCH_fleet.json BY NAME — the
-    scorecard suite (tools/fleet_scorecard.py) shares the file, and
-    whichever suite runs second must not clobber the other's rows."""
-    path = os.environ.get("BENCH_FLEET_JSON", "BENCH_fleet.json")
-    doc = {"schema": 1, "suite": "fleet_engine", "cases": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                prev = json.load(f)
-            if isinstance(prev.get("cases"), list):
-                doc = prev
-        except (json.JSONDecodeError, OSError):
-            pass                 # corrupt file: rewrite from scratch
-    fresh = {c["name"] for c in _CASES}
-    doc["cases"] = [c for c in doc["cases"]
-                    if c.get("name") not in fresh] + _CASES
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2)
-        f.write("\n")
-    return path
+    return merge_bench_json(_CASES)
 from repro.fleet.collector import Collector, CollectorConfig, JobStream
 from repro.fleet.engine import simulate_devices
 from repro.fleet.jobs import JobSpec, simulate_fleet

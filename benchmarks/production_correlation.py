@@ -2,68 +2,49 @@
 correlation, per-scale error table, and the two FLOPs-miscalculation case
 studies.
 
-The fleet is reconstructed at the paper's exact scale mix (Table III row
-counts).  The 288-GPU group runs the DeepSeek-style MoE with the buggy
-`naive_moe` counter (case 1); a slice of 256-GPU jobs runs the hybrid with
-`naive_hybrid` (case 2) — together the ~82 affected jobs of §V-C.
+The fleet is the shared `repro.fleet.table3` fixture (the paper's exact
+scale mix; the 288-GPU group runs the DeepSeek-style MoE with the buggy
+`naive_moe` counter, 17 of the 256-GPU jobs the hybrid with
+`naive_hybrid` — the ~82 affected jobs of §V-C).  This is the OFFLINE
+half of the correlation story: batch rollups + `divergence.analyze` +
+`correlation.analyze_correlation`.  `tools/fleet_correlate.py
+--self-check` replays the SAME fixture through a live Collector and the
+HTTP serve path and asserts the numbers match bucketwise.
+
+Emits a `production_correlation` case into `BENCH_fleet.json` with the
+headline numbers (r before/after exclusion, flagged counts, MAE).
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import Row, timed
-from repro.fleet.divergence import JobPoint, analyze
+from benchmarks.common import Row, bench_case, merge_bench_json, timed
+from repro.fleet import table3
+from repro.fleet.correlation import analyze_correlation
+from repro.fleet.divergence import analyze
 from repro.fleet.jobs import JobSpec, simulate_job
 
-# Table III scale mix: (gpus, jobs)
-SCALE_MIX = [(8, 6), (16, 48), (64, 52), (128, 48), (256, 76), (288, 65),
-             (512, 144), (736, 11), (768, 57), (1024, 49), (1536, 10),
-             (2944, 33), (5888, 9)]
-
-HEALTHY_ARCHS = ["qwen3-4b", "granite-3-2b", "llama3.2-3b", "mamba2-780m",
-                 "phi-3-vision-4.2b", "deepseek-moe-16b"]
+_CASES: list[dict] = []
 
 
-def build_fleet(seed: int = 0) -> list[JobPoint]:
-    rng = np.random.default_rng(seed)
-    points = []
-    hybrid_bugs = 17  # + 65 MoE jobs at 288 GPUs = 82 affected (paper)
-    for chips, njobs in SCALE_MIX:
-        for j in range(njobs):
-            jid = f"{chips}g_{j}"
-            duty = float(np.clip(rng.normal(0.28, 0.10), 0.08, 0.55))
-            if chips == 288:      # §V-C case 1
-                arch, variant = "deepseek-v3-671b", "naive_moe"
-                # the affected MoE jobs ran at low true efficiency; with the
-                # ~3x counter inflation they REPORTED ~40% MFU (Table III)
-                duty = float(np.clip(rng.normal(0.13, 0.03), 0.06, 0.25))
-            elif chips == 256 and hybrid_bugs > 0:   # §V-C case 2
-                arch, variant = "zamba2-7b", "naive_hybrid"
-                hybrid_bugs -= 1
-            else:
-                arch = HEALTHY_ARCHS[int(rng.integers(len(HEALTHY_ARCHS)))]
-                variant = "exact"
-            t = simulate_job(JobSpec(jid, arch, chips=chips,
-                                     flops_variant=variant, true_duty=duty,
-                                     duration_s=240,
-                                     seed=int(rng.integers(2 ** 31))),
-                             max_devices=1)
-            # wall-clock measurement noise in the app's timing path shrinks
-            # with scale (paper: small jobs show much larger abs err)
-            noise = rng.normal(0, 0.25 / np.sqrt(max(chips / 64, 1)))
-            mfu = max(t.app_mfu * (1 + noise), 0.01)
-            points.append(JobPoint(jid, arch, chips, mfu, t.ofu, variant))
-    return points
+def build_fleet(seed: int = 0):
+    """Offline JobPoints for the Fig. 5 sweep (shared fixture)."""
+    return table3.build_fleet(seed)
 
 
 def run() -> list[Row]:
     rows = []
-    points, us = timed(build_fleet, repeat=1)
-    rep = analyze(points, flag_rel_err=0.45)
+    jobs, us = timed(table3.build_jobs, repeat=1)
+    roll, mfu = table3.offline_rollups(jobs)
+    points = roll.to_job_points()
+    truth = table3.affected_ids(jobs)
+    affected = set().union(*truth.values()) if truth else set()
+
+    rep = analyze(points, flag_rel_err=table3.FLAG_REL_ERR)
+    flagged = {p.job_id for p in rep.flagged}
     rows.append(Row(
         "fig5.correlation", us / len(points),
         f"n={len(points)} r_all={rep.r_all:.2f} "
         f"r_after_exclusion={rep.r_clean:.2f} flagged={len(rep.flagged)} "
+        f"exact_match={flagged == affected} "
         f"mae={rep.mae_all * 100:.1f}pp "
         f"within10pp={rep.frac_within_10pp * 100:.0f}% "
         f"over20pp={rep.frac_over_20pp * 100:.1f}%"))
@@ -74,10 +55,33 @@ def run() -> list[Row]:
     rows.append(Row("fig5.flagged_breakdown", 0.0,
                     " ".join(f"{k}={v}" for k, v in
                              sorted(flagged_variants.items()))))
-    for chips, (n, mfu, err) in sorted(rep.by_scale.items()):
+    for chips, (n, mfu_pct, err) in sorted(rep.by_scale.items()):
         rows.append(Row(f"table3.gpus={chips}", 0.0,
-                        f"jobs={n} mfu={mfu * 100:.1f}% "
+                        f"jobs={n} mfu={mfu_pct * 100:.1f}% "
                         f"abs_err={err * 100:.1f}pp"))
+
+    # ---- the correlation tier proper: OFU/MFU join + ratio detector ----
+    crep, us_corr = timed(analyze_correlation, mfu, roll, repeat=1)
+    cflagged = {f.job_id for f in crep.flagged}
+    rows.append(Row(
+        "correlation.miscalc_scan", us_corr / max(crep.n_jobs, 1),
+        f"n={crep.n_jobs} r_all={crep.r_all:.2f} "
+        f"r_after_exclusion={crep.r_clean:.2f} flagged={len(cflagged)} "
+        f"exact_match={cflagged == affected} "
+        f"mae={crep.mae * 100:.1f}pp"))
+
+    bench_case(
+        _CASES, "production_correlation", round(crep.r_clean, 3),
+        "pearson_r",
+        jobs=crep.n_jobs,
+        r_all=round(crep.r_all, 3),
+        r_after_exclusion=round(crep.r_clean, 3),
+        flagged=len(cflagged),
+        affected=len(affected),
+        exact_match=bool(cflagged == affected and flagged == affected),
+        mae_pp=round(crep.mae * 100, 2),
+        build_wall_s=round(us / 1e6, 3),
+    )
 
     # ---- §V-C case studies (before/after FLOPs-counter fixes) ----
     moe_bad = simulate_job(JobSpec("cs1", "deepseek-v3-671b", chips=288,
@@ -105,6 +109,9 @@ def run() -> list[Row]:
         f"rel_err={abs(hyb_bad.app_mfu - hyb_bad.ofu) / hyb_bad.ofu * 100:.1f}% "
         f"fixed_mfu={hyb_fix.app_mfu * 100:.2f}% "
         f"fixed_rel_err={abs(hyb_fix.app_mfu - hyb_fix.ofu) / hyb_fix.ofu * 100:.1f}%"))
+
+    path = merge_bench_json(_CASES)
+    print(f"BENCH-JSON {path} cases={len(_CASES)}")
     return rows
 
 

@@ -23,6 +23,16 @@ _EXPORTS = {
     "JobPoint": "repro.fleet.divergence",
     "analyze": "repro.fleet.divergence",
     "analyze_rollup": "repro.fleet.divergence",
+    "DEFAULT_OFU_FLOOR": "repro.fleet.divergence",
+    "CorrelationConfig": "repro.fleet.correlation",
+    "CorrelationReport": "repro.fleet.correlation",
+    "MfuRollup": "repro.fleet.correlation",
+    "MiscalcFinding": "repro.fleet.correlation",
+    "analyze_correlation": "repro.fleet.correlation",
+    "joined_series": "repro.fleet.correlation",
+    "rolling_pearson": "repro.fleet.correlation",
+    "scan_miscalc": "repro.fleet.correlation",
+    "tile_quant_factor": "repro.fleet.correlation",
     # defined in the telemetry layer — resolving it must not load the
     # simulator (engine re-exports it only for back-compat)
     "DeviceGrid": "repro.telemetry.scrape",

@@ -31,8 +31,10 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.peaks import DEFAULT_CHIP, ChipSpec
+from repro.fleet.correlation import (CorrelationConfig, MfuRollup,
+                                     scan_miscalc)
 from repro.fleet.distributed import tree_reduce
-from repro.fleet.divergence import analyze_rollup
+from repro.fleet.divergence import DEFAULT_OFU_FLOOR, analyze_rollup
 from repro.fleet.goodput import scan_goodput
 from repro.fleet.regression import scan_rollup
 
@@ -57,6 +59,12 @@ class JobStream:
     arch: str = "unknown"
     flops_variant: str = "exact"
     chip: ChipSpec = DEFAULT_CHIP
+    #: live app-MFU sample stream (`telemetry.mfu.MfuReplaySource`, or a
+    #: `MfuReporter.to_source()` snapshot): polled every round alongside
+    #: the counter source into the collector's `MfuRollup`.  When set and
+    #: `app_mfu` is None, the job's divergence metadata tracks the
+    #: reporter's running mean instead of a static scalar.
+    mfu_source: Optional[object] = None
 
 
 # ---------------------------------------------------------------------------
@@ -184,7 +192,7 @@ class Alert:
     round_idx: int
     t_s: float                   # collector clock when fired
     job_id: str
-    kind: str                    # 'regression' | 'divergence'
+    kind: str                    # 'regression'|'divergence'|'goodput'|'miscalc'
     message: str
     factor: float = float("nan")  # regression factor / divergence rel err
 
@@ -265,12 +273,18 @@ class CollectorConfig:
     detector: dict = field(      # kwargs for regression.scan_rollup
         default_factory=lambda: {"window": 4, "min_duration": 2})
     flag_rel_err: float = 0.30   # divergence threshold
+    ofu_floor: float = DEFAULT_OFU_FLOOR   # idle jobs exempt from flagging
     clear_rounds: int = 2        # alert hysteresis
     adaptive: Optional[AdaptiveConfig] = None   # None = fixed intervals
     #: kwargs for `goodput.scan_goodput` (e.g. {"drop_threshold": 0.25,
     #: "window": 4, "min_duration": 2}); None disables the fleet-wide
     #: goodput drop detector (the default — fleet scans are opt-in)
     goodput: Optional[dict] = None
+    #: kwargs for `correlation.CorrelationConfig` (e.g.
+    #: {"ratio_high": 1.5}); the default {} enables the OFU/MFU-ratio
+    #: miscalculation detector with stock thresholds — it is a no-op
+    #: until some stream carries an `mfu_source`.  None disables it.
+    miscalc: Optional[dict] = field(default_factory=dict)
 
     def __post_init__(self):
         if self.round_s <= 0:
@@ -366,6 +380,12 @@ class Collector:
             cfg.bucket_s, retain=cfg.retain, bins=cfg.bins)
         self.controller = (AdaptiveScrapeController(cfg.adaptive)
                            if cfg.adaptive else None)
+        #: app-reported MFU samples bucketed on the SAME grid as the
+        #: rollup — the correlation tier's other half
+        self.mfu = MfuRollup(cfg.bucket_s)
+        self._miscalc_cfg = None if cfg.miscalc is None else \
+            CorrelationConfig(**{"ofu_floor": cfg.ofu_floor,
+                                 **cfg.miscalc})
         # eviction drifts a detection's start index by at most the
         # detector's reference window per round; anchors within that
         # tolerance are the same episode
@@ -450,6 +470,12 @@ class Collector:
         # detectors for THIS round haven't run yet when we poll)
         hot = self.deduper.active_jobs if self.controller else ()
         for st in self.streams:
+            # the app reporter's samples land first, so this round's
+            # divergence metadata already reflects them
+            if st.mfu_source is not None and not st.mfu_source.exhausted:
+                t_s, mfu = st.mfu_source.poll(cfg.round_s)
+                if len(t_s):
+                    self.mfu.observe_series(st.job_id, t_s, mfu)
             src = st.source
             if src.exhausted:
                 continue
@@ -458,9 +484,12 @@ class Collector:
                 continue
             if self.on_grid is not None:
                 self.on_grid(st, grid)
+            app_mfu = st.app_mfu
+            if app_mfu is None and st.mfu_source is not None:
+                app_mfu = self.mfu.job_mean(st.job_id)
             ofu = self.rollup.add_grid(
                 st.job_id, grid, chip=st.chip, group=st.group,
-                chips=st.chips, app_mfu=st.app_mfu, arch=st.arch,
+                chips=st.chips, app_mfu=app_mfu, arch=st.arch,
                 flops_variant=st.flops_variant)
             n_samples += grid.tpa.size
             if self.controller is not None and src.retimable:
@@ -503,8 +532,23 @@ class Collector:
                         f"({ev.ref_ofu * 100:.1f}% -> "
                         f"{ev.low_ofu * 100:.1f}%, {state})",
                         factor=ev.drop_frac))
+        if self._miscalc_cfg is not None:
+            # like divergence, a miscalculated counter is a property of
+            # the whole joined population, not a window event — episodes
+            # are unanchored and stay open while the ratio stays out
+            for f in scan_miscalc(self.mfu, self.rollup,
+                                  config=self._miscalc_cfg):
+                if self.deduper.offer((f.job_id, "miscalc")):
+                    fired.append(Alert(
+                        self.round_idx, self.clock_s, f.job_id,
+                        "miscalc",
+                        f"reported MFU {f.mfu * 100:.1f}% is "
+                        f"{f.ratio:.2f}x adjusted OFU "
+                        f"{f.ofu_adj * 100:.1f}% over {f.n_buckets} "
+                        f"buckets ({f.direction}) — FLOPs accounting "
+                        "suspect", factor=f.ratio))
         rep = analyze_rollup(self.rollup, flag_rel_err=cfg.flag_rel_err,
-                             empty_ok=True)
+                             ofu_floor=cfg.ofu_floor, empty_ok=True)
         if rep is not None:
             for p in rep.flagged:
                 if self.deduper.offer((p.job_id, "divergence")):

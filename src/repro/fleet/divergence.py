@@ -57,13 +57,40 @@ class DivergenceReport:
         return "\n".join(lines)
 
 
-def analyze(jobs: list, *, flag_rel_err: float = 0.30) -> DivergenceReport:
-    """Flag jobs with relative divergence > flag_rel_err (miscalc signature)."""
+#: Jobs whose OFU sits below this fraction are too idle to triage: the
+#: rel_err denominator is numerically meaningless there (a parked job
+#: with OFU=1e-4 and any nonzero reported MFU looks like a 1000x
+#: miscalculation).  Sub-floor jobs still count toward the correlation
+#: and error statistics — they are only exempt from FLAGGING.
+DEFAULT_OFU_FLOOR = 0.02
+
+
+def _empty_report() -> DivergenceReport:
+    """NaN-free placeholder for an empty population — every field a
+    strict-JSON serializer can pass through unchanged."""
+    return DivergenceReport(r_all=0.0, r_clean=0.0, mae_all=0.0,
+                            flagged=[], frac_within_10pp=1.0,
+                            frac_over_20pp=0.0, by_scale={})
+
+
+def analyze(jobs: list, *, flag_rel_err: float = 0.30,
+            ofu_floor: float = DEFAULT_OFU_FLOOR) -> DivergenceReport:
+    """Flag jobs with relative divergence > flag_rel_err (miscalc signature).
+
+    Jobs with OFU below `ofu_floor` are never flagged (their rel_err is
+    dominated by the denominator floor, not by miscalculation), and
+    degenerate populations (empty, single job, zero variance) yield
+    finite zero-correlation defaults rather than NaN — the report must
+    survive `json.dumps(allow_nan=False)` on the serve path.
+    """
+    if not jobs:
+        return _empty_report()
     mfu = np.array([j.mfu for j in jobs])
     ofu = np.array([j.ofu for j in jobs])
     err = np.abs(mfu - ofu)
 
-    flagged = [j for j in jobs if j.rel_err > flag_rel_err]
+    flagged = [j for j in jobs
+               if j.ofu >= ofu_floor and j.rel_err > flag_rel_err]
     flagged_ids = {j.job_id for j in flagged}
     clean = [j for j in jobs if j.job_id not in flagged_ids]
 
@@ -74,10 +101,12 @@ def analyze(jobs: list, *, flag_rel_err: float = 0.30) -> DivergenceReport:
                            float(np.mean([j.mfu for j in grp])),
                            float(np.mean([j.abs_err for j in grp])))
 
+    # pearson_r already returns 0.0 on a zero-variance denominator; the
+    # len guards keep the <2-sample mean subtraction from warning/NaN-ing
     return DivergenceReport(
-        r_all=pearson_r(mfu, ofu),
+        r_all=pearson_r(mfu, ofu) if len(jobs) >= 2 else 0.0,
         r_clean=pearson_r([j.mfu for j in clean], [j.ofu for j in clean])
-        if len(clean) > 2 else 1.0,
+        if len(clean) >= 2 else 0.0,
         mae_all=float(err.mean()),
         flagged=flagged,
         frac_within_10pp=float(np.mean(err <= 0.10)),
@@ -87,6 +116,7 @@ def analyze(jobs: list, *, flag_rel_err: float = 0.30) -> DivergenceReport:
 
 
 def analyze_rollup(roll, *, flag_rel_err: float = 0.30,
+                   ofu_floor: float = DEFAULT_OFU_FLOOR,
                    empty_ok: bool = False) -> Optional[DivergenceReport]:
     """Triage straight off a StreamingRollup (simulated, replayed, or
     tree-reduced): uses the rollup's per-job OFU plus the app-reported MFU
@@ -102,4 +132,4 @@ def analyze_rollup(roll, *, flag_rel_err: float = 0.30,
         raise ValueError(
             "rollup has no jobs with app-MFU metadata; ingest via add_job "
             "or add_grid(app_mfu=...) before divergence triage")
-    return analyze(pts, flag_rel_err=flag_rel_err)
+    return analyze(pts, flag_rel_err=flag_rel_err, ofu_floor=ofu_floor)

@@ -21,6 +21,10 @@ around them:
   * ``moe_expert_imbalance``     — periodic expert-routing hot spots
   * ``diurnal_inference``        — benign multi-tenant load swings: ZERO
     labels, so every alert fired is a false positive (precision probe)
+  * ``flops_miscalculation``     — §V-C live: the DeepSeek-style MoE's
+    `naive_moe` counter (~3x) and the hybrid's `naive_hybrid` (~1.8x)
+    stream inflated MFU through the app-reporter path; the correlation
+    tier's OFU/MFU-ratio detector must flag exactly those two jobs
 
 `scenarios.scorecard` replays these through the live `Collector` and
 scores each detector's precision / recall / time-to-detect against the
@@ -36,7 +40,7 @@ from repro.fleet.engine import CounterFault
 from repro.fleet.jobs import JobSpec
 
 #: detectors the scorecard knows how to score
-DETECTORS = ("regression", "divergence", "goodput")
+DETECTORS = ("regression", "divergence", "goodput", "miscalc")
 
 #: shared scenario geometry — 2 h of 30 s scrapes, 5 min buckets/rounds:
 #: long enough for a 4-bucket detector baseline on both sides of a
@@ -93,11 +97,24 @@ class Scenario:
     #: app's reporting follows the hardware, so divergence triage skips
     #: the job; absent = use the simulated app MFU as-is)
     app_mfu: dict = field(default_factory=dict)
+    #: job_id -> reported-MFU stream for the collector's app-reporter
+    #: path: jobs listed here replay a `MfuReplaySource.constant` series
+    #: through `JobStream.mfu_source` (the live correlation tier) instead
+    #: of carrying a static `app_mfu` scalar.  None = stream the job's
+    #: simulated app MFU; a float = stream that level.
+    mfu_stream: dict = field(default_factory=dict)
+    #: kwargs for the collector's `CorrelationConfig` ({} = stock
+    #: thresholds; None disables the miscalc detector)
+    miscalc_kw: Optional[dict] = field(default_factory=dict)
 
     def __post_init__(self):
         ids = [s.job_id for s in self.specs]
         if len(set(ids)) != len(ids):
             raise ValueError(f"duplicate job_ids in scenario: {ids}")
+        for jid in self.mfu_stream:
+            if jid not in ids:
+                raise ValueError(f"mfu_stream names unknown job {jid!r} "
+                                 f"(have {sorted(ids)})")
         known = set(ids) | {FLEET_SCOPE}
         for lbl in self.labels:
             if lbl.job_id not in known:
@@ -300,6 +317,46 @@ def diurnal_inference() -> Scenario:
     )
 
 
+def flops_miscalculation() -> Scenario:
+    """§V-C replayed live: two jobs stream MFU computed from BUGGY FLOPs
+    counters through the app-reporter path — the DeepSeek-style MoE
+    bills dense FLOPs for sparse experts (`naive_moe`, ~3x inflation at
+    671B/288 GPUs) and the hybrid bills attention math for its Mamba
+    blocks (`naive_hybrid`, ~1.8x at 7B/256 GPUs).  The hardware is
+    perfectly healthy: only the correlation tier's OFU/MFU-ratio scan
+    (and divergence triage, once the reporter mean lands in the
+    metadata) can see the books are cooked.  Three healthy jobs stream
+    truthful MFU as the precision probe."""
+    moe = _job("naive-moe-671b", "deepseek-v3-671b", seed=671, chips=288,
+               flops_variant="naive_moe", true_duty=0.13)
+    hyb = _job("naive-hybrid-7b", "zamba2-7b", seed=72, chips=256,
+               flops_variant="naive_hybrid", true_duty=0.20)
+    healthy = _healthy(3)
+    specs = [moe, hyb] + healthy
+    return Scenario(
+        name="flops_miscalculation",
+        description="two jobs report MFU from miscalculated FLOPs "
+                    "counters (naive_moe ~3x, naive_hybrid ~1.8x); "
+                    "counters are healthy — only the OFU<->MFU join "
+                    "catches it",
+        specs=specs,
+        labels=[
+            GroundTruthEvent("naive-moe-671b", "miscalc", 0.0,
+                             magnitude=3.0,
+                             note="dense-billed sparse experts"),
+            GroundTruthEvent("naive-hybrid-7b", "miscalc", 0.0,
+                             magnitude=1.8,
+                             note="attention-billed Mamba blocks"),
+            GroundTruthEvent("naive-moe-671b", "divergence", 0.0,
+                             magnitude=1.9, note="rel err ~190%"),
+            GroundTruthEvent("naive-hybrid-7b", "divergence", 0.0,
+                             magnitude=0.85, note="rel err ~85%"),
+        ],
+        # every job streams its (possibly cooked) reported MFU live
+        mfu_stream={s.job_id: None for s in specs},
+    )
+
+
 #: name -> builder; `build` is the public constructor
 SCENARIOS = {
     "gloo_regression_2p5x": gloo_regression_2p5x,
@@ -309,6 +366,7 @@ SCENARIOS = {
     "preemption_wave": preemption_wave,
     "moe_expert_imbalance": moe_expert_imbalance,
     "diurnal_inference": diurnal_inference,
+    "flops_miscalculation": flops_miscalculation,
 }
 
 

@@ -32,6 +32,7 @@ from repro.fleet.collector import (Collector, CollectorConfig, JobStream)
 from repro.fleet.jobs import simulate_fleet
 from repro.fleet.streaming import precision_label
 from repro.scenarios.library import Scenario, build, scenario_names
+from repro.telemetry.mfu import MfuReplaySource
 from repro.telemetry.source import GridSource
 
 SCHEMA = "fleet-scorecard-v1"
@@ -77,16 +78,31 @@ def run_scenario(sc: Scenario, *, engine: str = "fused",
     streams = []
     for spec, tel in zip(sc.specs, tels):
         app_mfu = sc.app_mfu.get(spec.job_id, tel.app_mfu)
+        mfu_src = None
+        if spec.job_id in sc.mfu_stream:
+            # the job reports MFU LIVE through the app-reporter path:
+            # a constant sample stream at the scrape cadence, at the
+            # job's (possibly miscalculated) reported level — the
+            # collector's MfuRollup + divergence metadata both follow
+            # the reporter instead of a static scalar
+            level = sc.mfu_stream[spec.job_id]
+            mfu_src = MfuReplaySource.constant(
+                tel.app_mfu if level is None else float(level),
+                duration_s=spec.duration_s,
+                interval_s=spec.scrape_interval_s)
+            app_mfu = None
         streams.append(JobStream(
             spec.job_id, GridSource(tel.grid), chips=spec.chips,
             group=precision_label(spec.precisions), app_mfu=app_mfu,
             arch=spec.arch, flops_variant=spec.flops_variant,
-            chip=spec.chip))
+            chip=spec.chip, mfu_source=mfu_src))
     col = Collector(streams, CollectorConfig(
         round_s=sc.round_s, bucket_s=sc.bucket_s, retain=sc.retain,
         detector=dict(sc.detector_kw),
         goodput=dict(sc.goodput_kw) if sc.goodput_kw is not None else None,
-        flag_rel_err=sc.flag_rel_err))
+        flag_rel_err=sc.flag_rel_err,
+        miscalc=dict(sc.miscalc_kw) if sc.miscalc_kw is not None
+        else None))
     col.run()                    # GridSources are bounded: runs to the end
     return ScenarioRun(sc, list(col.alerts), col, tels)
 
@@ -177,6 +193,13 @@ FLOORS = {
     ("diurnal_inference", "regression"): {"precision": 1.0},
     ("diurnal_inference", "divergence"): {"precision": 1.0},
     ("diurnal_inference", "goodput"): {"precision": 1.0},
+    ("diurnal_inference", "miscalc"): {"precision": 1.0},
+    ("flops_miscalculation", "miscalc"):
+        {"precision": 1.0, "recall": 1.0, "ttd_s": 600.0},
+    ("flops_miscalculation", "divergence"):
+        {"precision": 1.0, "recall": 1.0, "ttd_s": 1200.0},
+    ("flops_miscalculation", "regression"): {"precision": 1.0},
+    ("flops_miscalculation", "goodput"): {"precision": 1.0},
 }
 
 

@@ -31,6 +31,7 @@ import zlib
 from typing import Optional
 
 from repro.fleet import wire
+from repro.fleet.correlation import MfuRollup
 from repro.fleet.streaming import StreamingRollup
 
 
@@ -83,7 +84,8 @@ class IngestAggregator:
     """
 
     def __init__(self, *, n_shards: int = 4, max_queue: int = 32,
-                 retry_after_s: float = 0.05):
+                 retry_after_s: float = 0.05,
+                 mfu_bucket_s: float = 300.0):
         if n_shards < 1:
             raise ValueError(f"n_shards={n_shards} must be >= 1")
         if max_queue < 1:
@@ -92,6 +94,12 @@ class IngestAggregator:
         self.max_queue = int(max_queue)
         self.retry_after_s = float(retry_after_s)
         self._shards = [_Shard() for _ in range(self.n_shards)]
+        # app-MFU samples (POST /v1/mfu) are per-JOB, not per-host, and
+        # orders of magnitude lighter than counter deltas — one store
+        # under one lock is plenty, no sharding needed
+        self._mfu = MfuRollup(mfu_bucket_s)
+        self._mfu_lock = threading.Lock()
+        self.mfu_rows = 0
         self.publishes = 0
 
     def shard_of(self, host_id: str) -> int:
@@ -147,6 +155,16 @@ class IngestAggregator:
             with shard.gate:
                 shard.inflight -= 1
 
+    def submit_mfu(self, payload: dict) -> dict:
+        """Accumulate one POST /v1/mfu body — raw samples
+        ({"job_id", "samples": [[t_s, mfu], ...]}) or a pre-bucketed
+        `MfuRollup.to_payload()` dump.  Returns {"applied": rows};
+        raises ValueError on a malformed body (HTTP 400)."""
+        with self._mfu_lock:
+            n = self._mfu.apply_payload(payload)
+            self.mfu_rows += n
+        return {"applied": n}
+
     # -- reduction + publish --------------------------------------------
     def fleet_rollup(self) -> Optional[StreamingRollup]:
         """Reduce every host mirror to one fleet rollup (None when no
@@ -171,10 +189,13 @@ class IngestAggregator:
 
     def publish(self, store, *, clock_s: float = 0.0) -> int:
         """Reduce and push a new `FleetStore` generation (the rollup is
-        freshly built, so no defensive copy is taken)."""
+        freshly built and the MFU store snapshot-copied under its lock,
+        so no further defensive copy is taken)."""
         roll = self.fleet_rollup()
+        with self._mfu_lock:
+            mfu = self._mfu.copy() if self._mfu.jobs else None
         self.publishes += 1
-        return store.update(roll, round_idx=self.publishes,
+        return store.update(roll, mfu=mfu, round_idx=self.publishes,
                             clock_s=clock_s, copy=False)
 
     # -- observability --------------------------------------------------
@@ -188,6 +209,8 @@ class IngestAggregator:
                    "applied": s.applied, "duplicates": s.duplicates,
                    "gaps": s.gaps, "rejected": s.rejected,
                    "bytes_in": s.bytes_in} for s in self._shards]
+        with self._mfu_lock:
+            mfu_jobs = len(self._mfu.jobs)
         return {"n_shards": self.n_shards, "max_queue": self.max_queue,
                 "hosts": self.hosts,
                 "applied": sum(s["applied"] for s in shards),
@@ -195,5 +218,6 @@ class IngestAggregator:
                 "gaps": sum(s["gaps"] for s in shards),
                 "rejected": sum(s["rejected"] for s in shards),
                 "bytes_in": sum(s["bytes_in"] for s in shards),
+                "mfu_jobs": mfu_jobs, "mfu_rows": self.mfu_rows,
                 "publishes": self.publishes,
                 "shards": shards}

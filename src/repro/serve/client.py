@@ -153,8 +153,50 @@ class FleetClient:
     def goodput(self, healthy_ofu: Optional[float] = None) -> dict:
         return self.query("goodput", healthy_ofu=healthy_ofu)
 
-    def divergence(self, flag_rel_err: Optional[float] = None) -> dict:
-        return self.query("divergence", flag_rel_err=flag_rel_err)
+    def divergence(self, flag_rel_err: Optional[float] = None,
+                   ofu_floor: Optional[float] = None) -> dict:
+        return self.query("divergence", flag_rel_err=flag_rel_err,
+                          ofu_floor=ofu_floor)
+
+    def correlation(self, **params) -> dict:
+        """kind=correlation: the OFU<->MFU join report (params:
+        ratio_high, ratio_low, min_buckets, ofu_floor, window)."""
+        return self.query("correlation", **params)
+
+    def post_mfu(self, job_id: str, samples) -> dict:
+        """Ship app-reported MFU samples ([[t_s, mfu], ...] pairs, or
+        `telemetry.mfu.MfuSample`s) to POST /v1/mfu.  One plain POST, no
+        cursor: MFU rows are additive observations, so at-least-once
+        delivery only needs the caller not to re-send the same batch."""
+        rows = [[s.t_s, s.mfu] if hasattr(s, "mfu") else
+                [float(s[0]), float(s[1])] for s in samples]
+        body = json.dumps({"job_id": job_id, "samples": rows}).encode()
+        url = self.base_url + "/v1/mfu"
+        req = Request(url, data=body, method="POST",
+                      headers={"Content-Type": "application/json"})
+        delays = backoff_delays(self.retries, base_s=self.backoff_s,
+                                cap_s=self.backoff_cap_s)
+        while True:
+            self.requests += 1
+            try:
+                with urlopen(req, timeout=self.timeout_s) as resp:
+                    return json.loads(resp.read().decode())
+            except HTTPError as e:
+                try:
+                    msg = json.loads(e.read().decode()).get("error",
+                                                            e.reason)
+                except Exception:  # noqa: BLE001 — error body optional
+                    msg = str(e.reason)
+                raise FleetAPIError(e.code, msg) from None
+            except (TimeoutError, URLError, OSError) as e:
+                reason = getattr(e, "reason", e)
+                delay = next(delays, None)
+                if delay is None:
+                    raise FleetAPIError(
+                        0, f"cannot reach {url}: {reason}") from None
+                self.retried += 1
+                self._sleep(delay)
+                continue
 
 
 class IngestClient:

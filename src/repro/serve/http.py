@@ -10,8 +10,17 @@ Five endpoint families (JSON in both directions except ingest blobs):
         kind=top_regressions     &k=5&window=4&min_duration=2
                                  &factor_threshold=1.5
         kind=goodput             &healthy_ofu=0.40
-        kind=divergence          &flag_rel_err=0.30
+        kind=divergence          &flag_rel_err=0.30&ofu_floor=0.02
+        kind=correlation         &ratio_high=1.5&ratio_low=&min_buckets=1
+                                 &ofu_floor=0.02&window=8 — the OFU<->MFU
+                                 join (r with/without the flagged set,
+                                 per-scale error table, miscalc findings)
         kind=series              &scope=fleet|job|group&id=...&qs=...
+    /v1/mfu                      app-MFU ingest (needs an aggregator):
+        POST                     JSON body {"job_id", "samples":
+                                 [[t_s, mfu], ...]} or an
+                                 `MfuRollup.to_payload()` bucket dump;
+                                 200 {"applied"} rows accepted
     /v1/ingest                   the WRITE half (needs an aggregator):
         POST                     body = `StreamingRollup.delta_bytes()`
                                  blob, `X-Fleet-Host: <host-id>` header;
@@ -127,7 +136,15 @@ def _query(store: FleetStore, params: dict) -> dict:
             healthy_ofu=_num(params, "healthy_ofu", 0.40))
     if kind == "divergence":
         return store.divergence(
-            flag_rel_err=_num(params, "flag_rel_err", 0.30))
+            flag_rel_err=_num(params, "flag_rel_err", 0.30),
+            ofu_floor=_num(params, "ofu_floor", 0.02))
+    if kind == "correlation":
+        return store.correlation(
+            ratio_high=_num(params, "ratio_high", 1.5),
+            ratio_low=_num(params, "ratio_low", None),
+            min_buckets=_num(params, "min_buckets", 1, int),
+            ofu_floor=_num(params, "ofu_floor", 0.02),
+            window=_num(params, "window", 8, int))
     if kind == "series":
         scope = params.get("scope", "fleet")
         name = params.get("id")
@@ -144,7 +161,8 @@ def _query(store: FleetStore, params: dict) -> dict:
             return store.group_series(name, qs=qs)
         raise ApiError(400, f"unknown scope {scope!r}")
     raise ApiError(400, f"unknown query kind {kind!r} (want "
-                   "top_regressions, goodput, divergence, or series)")
+                   "top_regressions, goodput, divergence, correlation, "
+                   "or series)")
 
 
 def _make_handler(store: FleetStore, aggregator=None):
@@ -183,6 +201,10 @@ def _make_handler(store: FleetStore, aggregator=None):
         def _is_ingest(self, path: str) -> bool:
             return [unquote(p) for p in path.split("/") if p] \
                 == ["v1", "ingest"]
+
+        def _is_mfu(self, path: str) -> bool:
+            return [unquote(p) for p in path.split("/") if p] \
+                == ["v1", "mfu"]
 
         def do_GET(self) -> None:
             sp = urlsplit(self.path)
@@ -233,9 +255,26 @@ def _make_handler(store: FleetStore, aggregator=None):
             # keep-alive connection desynchronizes on the next request
             blob = self.rfile.read(length) if length else b""
             try:
+                if self._is_mfu(sp.path):
+                    if aggregator is None:
+                        raise ApiError(404, "no ingest tier configured "
+                                       "on this server")
+                    if not blob:
+                        raise ApiError(400, "POST /v1/mfu needs a JSON "
+                                       "body")
+                    try:
+                        payload = json.loads(blob.decode())
+                    except (UnicodeDecodeError,
+                            json.JSONDecodeError) as e:
+                        raise ApiError(400, f"POST /v1/mfu body is not "
+                                       f"valid JSON ({e})") from None
+                    out = aggregator.submit_mfu(payload)
+                    self._send(200, out)
+                    return
                 if not self._is_ingest(sp.path):
                     raise ApiError(404, f"unknown POST path "
-                                   f"{sp.path!r} (want /v1/ingest)")
+                                   f"{sp.path!r} (want /v1/ingest or "
+                                   "/v1/mfu)")
                 if aggregator is None:
                     raise ApiError(404, "no ingest tier configured on "
                                    "this server")

@@ -30,7 +30,9 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.fleet.divergence import analyze_rollup
+from repro.fleet.correlation import (CorrelationConfig, MfuRollup,
+                                     analyze_correlation)
+from repro.fleet.divergence import DEFAULT_OFU_FLOOR, analyze_rollup
 from repro.fleet.regression import scan_rollup
 from repro.fleet.streaming import (StreamingRollup, _json_list,
                                    weighted_mean)
@@ -65,6 +67,7 @@ class FleetStore:
     def __init__(self):
         self._lock = threading.RLock()
         self._rollup: Optional[StreamingRollup] = None
+        self._mfu: Optional[MfuRollup] = None    # app-reported half
         self._alerts: list = []          # alert payload dicts, in order
         self._alerts_raw: list = []      # the objects they came from
         self._active: list = []          # open episode keys [job, kind]
@@ -81,16 +84,21 @@ class FleetStore:
     # -- publish --------------------------------------------------------
     def update(self, rollup: Optional[StreamingRollup], *,
                alerts: Sequence = (), active: Sequence = (),
+               mfu: Optional[MfuRollup] = None,
                round_idx: int = 0, clock_s: float = 0.0,
                copy: bool = True) -> int:
         """Publish a new generation of fleet state; returns it.
 
         `copy=True` (default) stores an isolated merge-copy of the
-        rollup, so the caller may keep mutating the original between
-        publishes — the contract a live collector needs.
+        rollup (and of `mfu`, the app-reported bucket store backing
+        correlation queries), so the caller may keep mutating the
+        originals between publishes — the contract a live collector
+        needs.
         """
         if copy and rollup is not None:
             rollup = rollup.spawn_empty().merge(rollup)
+        if copy and mfu is not None:
+            mfu = mfu.copy()
         alerts = list(alerts)
         with self._lock:
             # a collector's alert log is append-only and republished
@@ -106,6 +114,7 @@ class FleetStore:
                 payloads = [alert_payload(a) for a in alerts]
             self._alerts_raw = alerts
             self._rollup = rollup
+            self._mfu = mfu
             self._alerts = payloads
             self._active = [list(k) for k in active]
             self.round_idx = int(round_idx)
@@ -124,8 +133,15 @@ class FleetStore:
                             key=lambda a: (a.round_idx, a.job_id, a.kind))
             active = sorted({k for c in hosts for k in c.deduper.active},
                             key=repr)
+            # MFU streams are per-host too: reduce them the same way the
+            # counter rollups tree-reduce (merge is assoc + commutative)
+            mfu = None
+            for c in hosts:
+                part = getattr(c, "mfu", None)
+                if part is not None and part.jobs:
+                    mfu = part.copy() if mfu is None else mfu.merge(part)
             return self.update(
-                collector.fleet, alerts=alerts, active=active,
+                collector.fleet, alerts=alerts, active=active, mfu=mfu,
                 round_idx=collector.rounds,
                 clock_s=max((c.clock_s for c in hosts), default=0.0),
                 copy=copy)
@@ -134,7 +150,8 @@ class FleetStore:
                             f"FleetCollector, got {type(collector).__name__}")
         return self.update(
             collector.rollup, alerts=collector.alerts,
-            active=collector.deduper.active, round_idx=collector.round_idx,
+            active=collector.deduper.active, mfu=collector.mfu,
+            round_idx=collector.round_idx,
             clock_s=collector.clock_s, copy=copy)
 
     # -- query plumbing -------------------------------------------------
@@ -328,18 +345,24 @@ class FleetStore:
                     "jobs": jobs}
         return self._query(key, build)
 
-    def divergence(self, flag_rel_err: float = 0.30) -> dict:
+    def divergence(self, flag_rel_err: float = 0.30,
+                   ofu_floor: float = DEFAULT_OFU_FLOOR) -> dict:
         """MFU-vs-OFU triage over jobs that registered an app MFU (§V-C);
-        empty when none have."""
+        empty when none have.  Jobs with OFU below `ofu_floor` are never
+        flagged (an idle denominator proves nothing)."""
         if not np.isfinite(flag_rel_err) or flag_rel_err <= 0:
             raise ValueError(f"flag_rel_err={flag_rel_err} must be a "
                              "positive finite number")
-        key = ("divergence", flag_rel_err)
+        if not np.isfinite(ofu_floor) or ofu_floor < 0:
+            raise ValueError(f"ofu_floor={ofu_floor} must be a "
+                             "non-negative finite number")
+        key = ("divergence", flag_rel_err, ofu_floor)
 
         def build():
             roll = self._roll
             rep = None if roll is None else analyze_rollup(
-                roll, flag_rel_err=flag_rel_err, empty_ok=True)
+                roll, flag_rel_err=flag_rel_err, ofu_floor=ofu_floor,
+                empty_ok=True)
             if rep is None:
                 return {"flag_rel_err": flag_rel_err, "flagged": []}
             return {"flag_rel_err": flag_rel_err,
@@ -351,4 +374,42 @@ class FleetStore:
                                  "ofu": _finite(p.ofu),
                                  "rel_err": _finite(p.rel_err)}
                                 for p in rep.flagged]}
+        return self._query(key, build)
+
+    def correlation(self, *, ratio_high: float = 1.5,
+                    ratio_low: Optional[float] = None,
+                    min_buckets: int = 1,
+                    ofu_floor: float = DEFAULT_OFU_FLOOR,
+                    window: int = 8) -> dict:
+        """The OFU<->MFU join over the published generation: fleet r
+        with/without the miscalculation set, tile-quantization-corrected
+        MAE, the per-scale error table (Table III live), per-job rows,
+        and the flagged findings.  Empty-safe: without MFU samples the
+        report is all zeros and no flags."""
+        cfg = CorrelationConfig(ratio_high=ratio_high,
+                                ratio_low=ratio_low,
+                                min_buckets=min_buckets,
+                                ofu_floor=ofu_floor, window=window)
+        key = ("correlation", cfg.ratio_high, cfg.ratio_low,
+               cfg.min_buckets, cfg.ofu_floor, cfg.window)
+
+        def build():
+            roll, mfu = self._roll, self._mfu
+            if roll is None or mfu is None:
+                return {"config": {"ratio_high": cfg.ratio_high,
+                                   "ratio_low": cfg.ratio_low,
+                                   "min_buckets": cfg.min_buckets,
+                                   "ofu_floor": cfg.ofu_floor,
+                                   "window": cfg.window},
+                        "n_jobs": 0, "r_all": 0.0, "r_clean": 0.0,
+                        "mae": 0.0, "flagged": [], "by_scale": {},
+                        "jobs": []}
+            rep = analyze_correlation(mfu, roll, config=cfg)
+            out = rep.to_payload()
+            out["config"] = {"ratio_high": cfg.ratio_high,
+                             "ratio_low": cfg.ratio_low,
+                             "min_buckets": cfg.min_buckets,
+                             "ofu_floor": cfg.ofu_floor,
+                             "window": cfg.window}
+            return out
         return self._query(key, build)

@@ -4,6 +4,10 @@ from repro.telemetry.counters import (  # noqa: F401
     StepProfile, TpuProfilerBackend, check_scrape_interval, duty_grid,
     event_factors,
 )
+from repro.telemetry.mfu import (  # noqa: F401
+    MfuReplaySource, MfuReporter, MfuSample, compute_mfu,
+    extract_tflops_from_log, reported_tflops_per_gpu,
+)
 from repro.telemetry.scrape import DeviceGrid, ScrapeSeries, scrape  # noqa: F401
 from repro.telemetry.source import (  # noqa: F401
     BackendSource, GridSource, SimulatorSource, TelemetrySource,

@@ -1,0 +1,490 @@
+"""OFU<->MFU correlation tier (ISSUE 9 acceptance): the app-reporter ->
+`MfuRollup` -> join -> miscalculation-detector -> serve chain, plus the
+two divergence bugfixes that ride along (idle-job `ofu_floor` exemption,
+NaN-free degenerate populations through strict-JSON `/v1/query`).
+"""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.fleet.collector import Collector, CollectorConfig, JobStream
+from repro.fleet.correlation import (CorrelationConfig, MfuRollup,
+                                     analyze_correlation, joined_series,
+                                     rolling_pearson, scan_miscalc,
+                                     tile_quant_factor)
+from repro.fleet.divergence import (DEFAULT_OFU_FLOOR, JobPoint, analyze,
+                                    analyze_rollup)
+from repro.fleet.streaming import StreamingRollup
+from repro.serve import (FleetAPIError, FleetAPIServer, FleetClient,
+                         FleetStore, IngestAggregator)
+from repro.telemetry import Event, StepProfile
+from repro.telemetry.mfu import (MfuReplaySource, MfuReporter, MfuSample,
+                                 compute_mfu, extract_tflops_from_log,
+                                 reported_tflops_per_gpu)
+from repro.telemetry.source import GridSource
+
+from repro.fleet.engine import simulate_devices
+
+PROFILE = StepProfile(mxu_time_s=0.84, step_time_s=2.0)
+IDLE_PROFILE = StepProfile(mxu_time_s=0.002, step_time_s=2.0)
+
+
+def _grid(profile=PROFILE, seed=7, duration_s=1800.0, events=()):
+    return simulate_devices(profile, duration_s=duration_s,
+                            interval_s=30.0, events=list(events),
+                            n_devices=2, seed=seed)
+
+
+def _mfu_roll(series, bucket_s=300.0):
+    """MfuRollup from {job_id: (t_s, mfu)} arrays."""
+    roll = MfuRollup(bucket_s)
+    for jid, (t, v) in series.items():
+        roll.observe_series(jid, t, v)
+    return roll
+
+
+# ---------------------------------------------------------------------------
+# MfuRollup: bucket rule, merge laws, wire round-trip
+# ---------------------------------------------------------------------------
+def test_mfu_bucket_rule_matches_counter_rollup():
+    """Right-closed buckets, the ONE rule both rollups share: a sample
+    AT a boundary belongs to the earlier bucket."""
+    mfu = MfuRollup(bucket_s=300.0)
+    ctr = StreamingRollup(bucket_s=300.0)
+    for t in (0.0, 1.0, 299.9, 300.0, 300.1, 900.0):
+        mfu.observe("j", t, 0.4)
+        ctr.observe("j", np.array([t]), np.array([0.4]))
+    idx, _ = mfu.job_series("j")
+    rows = np.nonzero(ctr.job_stats("j", qs=()).weight > 0)[0]
+    np.testing.assert_array_equal(idx, rows)     # [0, 1, 2]
+    assert idx.tolist() == [0, 1, 2]
+
+
+def test_observe_series_equals_repeated_observe():
+    t = np.array([30.0, 60.0, 330.0, 610.0])
+    v = np.array([0.3, 0.5, 0.4, 0.2])
+    bulk, loop = MfuRollup(300.0), MfuRollup(300.0)
+    bulk.observe_series("j", t, v)
+    for ti, vi in zip(t, v):
+        loop.observe("j", ti, vi)
+    for roll in (bulk, loop):
+        idx, mean = roll.job_series("j")
+        assert idx.tolist() == [0, 1, 2]
+        np.testing.assert_allclose(mean, [0.4, 0.4, 0.2])
+    assert bulk.job_mean("j") == pytest.approx(loop.job_mean("j"))
+    assert bulk.n_samples("j") == 4
+
+
+def test_merge_is_commutative_and_payload_round_trips():
+    a = _mfu_roll({"x": (np.array([30.0, 330.0]), np.array([0.3, 0.5]))})
+    b = _mfu_roll({"x": (np.array([40.0]), np.array([0.7])),
+                   "y": (np.array([630.0]), np.array([0.2]))})
+    ab = a.copy().merge(b)
+    ba = b.copy().merge(a)
+    assert ab.to_payload() == ba.to_payload()
+    # merge accumulated, operands untouched
+    assert ab.job_mean("x") == pytest.approx((0.3 + 0.5 + 0.7) / 3)
+    assert a.job_mean("x") == pytest.approx(0.4)
+    # wire round-trip: apply_payload rebuilds the exact accumulator
+    back = MfuRollup(300.0)
+    assert back.apply_payload(ab.to_payload()) == 3   # bucket rows
+    assert back.to_payload() == ab.to_payload()
+    # raw-sample body (the POST /v1/mfu shape)
+    raw = MfuRollup(300.0)
+    n = raw.apply_payload(
+        {"job_id": "j", "samples": [[30.0, 0.4], [90.0, 0.6]]})
+    assert n == 2 and raw.job_mean("j") == pytest.approx(0.5)
+
+
+@pytest.mark.parametrize("payload", [
+    "not a dict",
+    {"samples": [[0, 0.4]]},                       # missing job_id
+    {"job_id": "j", "samples": [[1.0]]},           # not pairs
+    {"job_id": "j", "samples": [["x", "y"]]},      # not numbers
+    {"jobs": "nope"},                              # jobs not a dict
+    {"jobs": {"j": [[0, -1.0, 0.4]]}},             # non-positive weight
+    {"jobs": {"j": [[0, 1.0]]}},                   # not triples
+    {"bucket_s": 60.0, "jobs": {"j": [[0, 1.0, 0.4]]}},  # bucket clash
+])
+def test_apply_payload_rejects_malformed(payload):
+    with pytest.raises(ValueError):
+        MfuRollup(300.0).apply_payload(payload)
+
+
+def test_mfu_rollup_validation():
+    with pytest.raises(ValueError):
+        MfuRollup(0.0)
+    roll = MfuRollup(300.0)
+    with pytest.raises(ValueError):
+        roll.observe("", 30.0, 0.4)
+    with pytest.raises(ValueError):
+        roll.observe("j", 30.0, 0.4, weight=0.0)
+    with pytest.raises(ValueError):
+        roll.observe_series("j", [1.0, 2.0], [0.4])
+    with pytest.raises(ValueError):
+        roll.merge(MfuRollup(60.0))
+    assert roll.job_mean("absent") is None
+
+
+# ---------------------------------------------------------------------------
+# join + rolling r
+# ---------------------------------------------------------------------------
+def test_joined_series_intersects_on_absolute_buckets():
+    ctr = StreamingRollup(bucket_s=300.0)
+    # OFU in buckets 0..3
+    t = np.arange(30.0, 1200.0 + 1e-9, 30.0)
+    ctr.observe("j", t, np.full(t.size, 0.4))
+    # MFU only in buckets 1, 2, and 9 (no counter data there)
+    mfu = _mfu_roll({"j": (np.array([330.0, 630.0, 2730.0]),
+                           np.array([0.41, 0.42, 0.9]))})
+    idx, mval, oval = joined_series(mfu, ctr, "j")
+    assert idx.tolist() == [1, 2]
+    np.testing.assert_allclose(mval, [0.41, 0.42])
+    np.testing.assert_allclose(oval, [0.4, 0.4])
+    # either side missing the job -> empty join, not an error
+    empty = joined_series(mfu, ctr, "ghost")
+    assert all(arr.size == 0 for arr in empty)
+    with pytest.raises(ValueError):
+        joined_series(MfuRollup(60.0), ctr, "j")
+
+
+def test_rolling_pearson_tracks_and_degrades_to_zero():
+    x = np.linspace(0.1, 0.5, 12)
+    r = rolling_pearson(x, 2.0 * x + 0.05, window=4)
+    assert r[0] == 0.0                       # one point: undefined -> 0
+    np.testing.assert_allclose(r[1:], 1.0, atol=1e-12)
+    flat = rolling_pearson(np.full(6, 0.3), x[:6], window=4)
+    assert np.all(flat == 0.0)               # zero variance, never NaN
+    with pytest.raises(ValueError):
+        rolling_pearson(x, x, window=1)
+    with pytest.raises(ValueError):
+        rolling_pearson(x, x[:-1])
+
+
+# ---------------------------------------------------------------------------
+# the miscalculation scan
+# ---------------------------------------------------------------------------
+def _ctr(series, bucket_s=300.0):
+    roll = StreamingRollup(bucket_s=bucket_s)
+    for jid, level in series.items():
+        t = np.arange(30.0, 1800.0 + 1e-9, 30.0)
+        roll.observe(jid, t, np.full(t.size, level))
+    return roll
+
+
+def test_scan_miscalc_flags_ratio_band_violations():
+    ctr = _ctr({"ok": 0.40, "hot": 0.40, "cold": 0.40, "idle": 0.005})
+    t = np.arange(30.0, 1800.0 + 1e-9, 30.0)
+    mfu = _mfu_roll({
+        "ok": (t, np.full(t.size, 0.42)),     # ratio 1.05: healthy
+        "hot": (t, np.full(t.size, 1.20)),    # ratio 3.0: inflated
+        "cold": (t, np.full(t.size, 0.10)),   # ratio 0.25: deflated
+        "idle": (t, np.full(t.size, 0.40)),   # sub-floor OFU: exempt
+    })
+    found = {f.job_id: f for f in scan_miscalc(mfu, ctr)}
+    assert set(found) == {"hot", "cold"}
+    assert found["hot"].direction == "inflated"
+    assert found["hot"].ratio == pytest.approx(3.0)
+    assert found["hot"].tq_factor == 1.0      # unknown arch: identity
+    assert found["cold"].direction == "deflated"
+    # worst |log ratio| first
+    assert [f.job_id for f in scan_miscalc(mfu, ctr)] == ["cold", "hot"]
+    # the idle exemption is the floor's doing: floor 0 flags it too
+    cfg = CorrelationConfig(ofu_floor=0.0)
+    assert "idle" in {f.job_id for f in scan_miscalc(mfu, ctr, config=cfg)}
+    # min_buckets guards thin joins
+    thin = _mfu_roll({"hot": (np.array([330.0]), np.array([1.2]))})
+    cfg = CorrelationConfig(min_buckets=2)
+    assert scan_miscalc(thin, ctr, config=cfg) == []
+
+
+def test_correlation_config_validation():
+    assert CorrelationConfig().ratio_low == pytest.approx(1 / 1.5)
+    for kw in ({"ratio_high": 1.0}, {"ratio_low": 1.2},
+               {"min_buckets": 0}, {"window": 1}):
+        with pytest.raises(ValueError):
+            CorrelationConfig(**kw)
+
+
+def test_tile_quant_factor_identity_for_unknown_arch():
+    assert tile_quant_factor("no-such-arch") == 1.0
+    tq = tile_quant_factor("llama3.2-3b")
+    assert 0.5 < tq <= 1.0
+
+
+def test_analyze_correlation_degenerate_populations_stay_finite():
+    # empty: all zeros, strict-JSON clean
+    rep = analyze_correlation(MfuRollup(300.0), _ctr({}))
+    assert (rep.n_jobs, rep.r_all, rep.r_clean, rep.mae) == (0, 0, 0, 0)
+    json.dumps(rep.to_payload(), allow_nan=False)
+    # one job / zero-variance population: r guards to 0.0, never NaN
+    ctr = _ctr({"only": 0.40})
+    t = np.arange(30.0, 1800.0 + 1e-9, 30.0)
+    rep = analyze_correlation(
+        _mfu_roll({"only": (t, np.full(t.size, 0.42))}), ctr)
+    assert rep.n_jobs == 1 and rep.r_all == 0.0 and rep.r_clean == 0.0
+    assert rep.mae == pytest.approx(0.02)
+    json.dumps(rep.to_payload(), allow_nan=False)
+
+
+# ---------------------------------------------------------------------------
+# divergence bugfixes: idle-job floor, degenerate r
+# ---------------------------------------------------------------------------
+def test_divergence_idle_job_exempt_below_ofu_floor():
+    """A parked job (OFU ~0.1%) with any reported MFU used to dominate
+    the flag list through the rel_err denominator; the floor exempts it
+    from flagging without dropping it from the statistics."""
+    pts = [JobPoint("busy", "llama3.2-3b", 64, mfu=0.41, ofu=0.40),
+           JobPoint("busy2", "llama3.2-3b", 64, mfu=0.30, ofu=0.29),
+           JobPoint("idle", "llama3.2-3b", 8, mfu=0.05, ofu=0.001)]
+    rep = analyze(pts, flag_rel_err=0.30)
+    assert [p.job_id for p in rep.flagged] == []
+    # still counted in the population statistics
+    assert 8 in rep.by_scale
+    # floor 0 restores the old (buggy) behaviour on demand
+    rep0 = analyze(pts, flag_rel_err=0.30, ofu_floor=0.0)
+    assert [p.job_id for p in rep0.flagged] == ["idle"]
+    assert DEFAULT_OFU_FLOOR == pytest.approx(0.02)
+
+
+def test_divergence_degenerate_population_is_nan_free():
+    one = analyze([JobPoint("a", "x", 8, mfu=0.4, ofu=0.4)])
+    assert one.r_all == 0.0 and one.r_clean == 0.0
+    assert np.isfinite(one.mae_all)
+    empty = analyze_rollup(StreamingRollup(300.0), empty_ok=True)
+    assert empty is None
+    with pytest.raises(ValueError):
+        analyze_rollup(StreamingRollup(300.0))
+
+
+# ---------------------------------------------------------------------------
+# live collector: MFU streams feed the rollup, miscalc alerts fire
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def miscalc_collector():
+    """Two healthy jobs + one whose reporter claims ~3x its OFU."""
+    grids = {name: _grid(seed=s) for name, s in
+             (("ok-a", 11), ("ok-b", 12), ("bad", 13))}
+    ofu_level = {}
+    for name, grid in grids.items():
+        probe = StreamingRollup(bucket_s=300.0)
+        probe.add_grid(name, grid)
+        st = probe.job_stats(name, qs=())
+        ofu_level[name] = float(np.nansum(st.mean * st.weight)
+                                / np.nansum(st.weight))
+    factor = {"ok-a": 1.03, "ok-b": 0.98, "bad": 3.0}
+    streams = [JobStream(
+        name, GridSource(grid), chips=64,
+        mfu_source=MfuReplaySource.constant(
+            factor[name] * ofu_level[name], duration_s=1800.0,
+            interval_s=30.0))
+        for name, grid in grids.items()]
+    col = Collector(streams, CollectorConfig(round_s=300.0,
+                                             bucket_s=300.0))
+    col.run()
+    return col, ofu_level, factor
+
+
+def test_collector_streams_mfu_and_flags_miscalc(miscalc_collector):
+    col, ofu_level, factor = miscalc_collector
+    # every stream's samples landed in the collector's MfuRollup
+    for name, lvl in ofu_level.items():
+        assert col.mfu.n_samples(name) == 60            # 1800 / 30
+        assert col.mfu.job_mean(name) == pytest.approx(factor[name] * lvl)
+        # divergence metadata follows the reporter, not a static scalar
+        meta = col.rollup.job_meta(name)
+        assert meta["app_mfu"] == pytest.approx(factor[name] * lvl)
+    flagged = {a.job_id for a in col.alerts if a.kind == "miscalc"}
+    assert flagged == {"bad"}
+    # unanchored population-level episode: fires once, stays active
+    alerts = [a for a in col.alerts if a.kind == "miscalc"]
+    assert len(alerts) == 1 and ("bad", "miscalc") in col.deduper.active
+
+
+def test_collector_miscalc_none_disables_detector():
+    grid = _grid(seed=13)
+    streams = [JobStream("bad", GridSource(grid), chips=64,
+                         mfu_source=MfuReplaySource.constant(
+                             1.5, duration_s=1800.0, interval_s=30.0))]
+    col = Collector(streams, CollectorConfig(round_s=300.0, bucket_s=300.0,
+                                             miscalc=None))
+    col.run()
+    assert not [a for a in col.alerts if a.kind == "miscalc"]
+
+
+# ---------------------------------------------------------------------------
+# serve path: /v1/query kinds, POST /v1/mfu, client surface
+# ---------------------------------------------------------------------------
+def test_correlation_through_live_serve(miscalc_collector):
+    col, ofu_level, factor = miscalc_collector
+    store = FleetStore()
+    store.update_from(col)
+    agg = IngestAggregator(n_shards=1)
+    with FleetAPIServer(store, aggregator=agg) as server:
+        client = FleetClient(server.url)
+        corr = client.correlation()
+        assert corr["n_jobs"] == 3
+        assert {f["job_id"] for f in corr["flagged"]} == {"bad"}
+        f = next(f for f in corr["flagged"] if f["job_id"] == "bad")
+        assert f["ratio"] == pytest.approx(3.0, rel=0.05)
+        assert f["direction"] == "inflated"
+        by_job = {row["job_id"]: row for row in corr["jobs"]}
+        assert by_job["bad"]["flagged"] and not by_job["ok-a"]["flagged"]
+        # parameter plumbing: a wide-open band flags nothing
+        assert client.correlation(ratio_high=10.0)["flagged"] == []
+        # identical query rides the generation cache (same dict)
+        assert client.correlation() == corr
+        json.dumps(corr, allow_nan=False)
+
+        # POST /v1/mfu -> aggregator -> publish -> visible in the store
+        t = np.arange(30.0, 1800.0 + 1e-9, 30.0)
+        out = client.post_mfu(
+            "posted", [[float(ti), 0.35] for ti in t])
+        assert out["applied"] == t.size
+        agg.publish(store, clock_s=col.clock_s)
+        stats = client._get("/v1/ingest")
+        assert stats["mfu_jobs"] == 1 and stats["mfu_rows"] == t.size
+
+        # malformed body is a JSON 400, not a traceback
+        req = urllib.request.Request(
+            server.url + "/v1/mfu", data=b"{not json",
+            headers={"Content-Type": "application/json"}, method="POST")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req)
+        assert ei.value.code == 400
+        assert "error" in json.loads(ei.value.read().decode())
+        with pytest.raises(FleetAPIError) as ce:
+            client.post_mfu("", [[30.0, 0.4]])
+        assert ce.value.status == 400
+
+
+def test_post_mfu_without_aggregator_is_404():
+    store = FleetStore()
+    with FleetAPIServer(store) as server:
+        with pytest.raises(FleetAPIError) as ei:
+            FleetClient(server.url).post_mfu("j", [[30.0, 0.4]])
+        assert ei.value.status == 404
+
+
+def test_divergence_floor_and_degenerate_through_query():
+    """The two bugfixes, regression-tested end to end over HTTP."""
+    roll = StreamingRollup(bucket_s=300.0)
+    roll.add_grid("healthy", _grid(seed=31), chips=64, app_mfu=0.38)
+    roll.add_grid("healthy2", _grid(
+        PROFILE, seed=32,
+        events=[Event(0.0, 1800.0, slowdown=1.4)]), chips=64, app_mfu=0.28)
+    roll.add_grid("idle", _grid(IDLE_PROFILE, seed=33), chips=8,
+                  app_mfu=0.05)
+    store = FleetStore()
+    store.update(roll)
+    with FleetAPIServer(store) as server:
+        client = FleetClient(server.url)
+        div = client.divergence()
+        assert "idle" not in {f["job_id"] for f in div["flagged"]}
+        div0 = client.divergence(ofu_floor=0.0)
+        assert "idle" in {f["job_id"] for f in div0["flagged"]}
+        json.dumps(div, allow_nan=False)
+
+    # degenerate population (one reporting job): finite zeros over HTTP
+    lone = StreamingRollup(bucket_s=300.0)
+    lone.add_grid("only", _grid(seed=34), chips=64, app_mfu=0.40)
+    store2 = FleetStore()
+    store2.update(lone)
+    with FleetAPIServer(store2) as server:
+        div = FleetClient(server.url).divergence()
+        assert div["r_all"] == 0.0 and div["r_clean"] == 0.0
+        json.dumps(div, allow_nan=False)
+        corr = FleetClient(server.url).correlation()
+        assert corr["n_jobs"] == 0 and corr["flagged"] == []
+
+
+# ---------------------------------------------------------------------------
+# the reporter: log lines -> samples -> sources
+# ---------------------------------------------------------------------------
+MEGATRON_LINE = (" iteration {it}/ 1000 | consumed samples: 4096 | "
+                 "elapsed time per iteration (ms): {ms} | "
+                 "throughput per GPU (TFLOP/s/GPU): {tfl} | "
+                 "learning rate: 3.0E-04 |")
+
+
+def test_extract_tflops_parses_megatron_lines():
+    lines = [MEGATRON_LINE.format(it=10, ms="2100.5", tfl="412.3"),
+             "saving checkpoint at iteration 10",
+             MEGATRON_LINE.format(it=20, ms="2050.0", tfl="430.1")]
+    recs = extract_tflops_from_log("\n".join(lines))
+    assert [r["iteration"] for r in recs] == [10, 20]
+    assert recs[0]["tflops_per_gpu"] == pytest.approx(412.3)
+    assert recs[1]["elapsed_ms"] == pytest.approx(2050.0)
+
+
+def test_reporter_clock_follows_elapsed_ms():
+    rep = MfuReporter("j", peak_tflops=1000.0)
+    out = rep.feed_log([
+        MEGATRON_LINE.format(it=1, ms="2000.0", tfl="400.0"),
+        "noise line",
+        MEGATRON_LINE.format(it=2, ms="3000.0", tfl="500.0")])
+    assert [s.t_s for s in out] == [2.0, 5.0]
+    assert out[0].mfu == pytest.approx(0.4)
+    assert out[1].iteration == 2
+    # explicit t_s pins and resets the clock
+    s = rep.feed(MEGATRON_LINE.format(it=3, ms="2000.0", tfl="600.0"),
+                 t_s=100.0)
+    assert s.t_s == 100.0 and rep.samples[-1].mfu == pytest.approx(0.6)
+    # to_source round-trips through poll semantics
+    src = rep.to_source()
+    t, v = src.poll(10.0)
+    assert t.tolist() == [2.0, 5.0]
+    assert not src.exhausted
+    t, v = src.poll(1000.0)
+    assert t.tolist() == [100.0] and src.exhausted
+
+
+def test_replay_source_poll_contract():
+    src = MfuReplaySource.constant(0.4, duration_s=300.0, interval_s=30.0)
+    assert src.t_s.size == 10 and src.t_s[0] == 30.0
+    t1, _ = src.poll(150.0)      # (0, 150]
+    assert t1.tolist() == [30.0, 60.0, 90.0, 120.0, 150.0]
+    t2, _ = src.poll(150.0)      # (150, 300]
+    assert t2.size == 5 and src.exhausted
+    src.seek(0.0)
+    assert not src.exhausted
+    with pytest.raises(ValueError):
+        src.poll(0.0)
+    with pytest.raises(ValueError):
+        src.seek(-1.0)
+    with pytest.raises(ValueError):
+        MfuReplaySource([2.0, 1.0], [0.1, 0.2])    # non-monotone
+
+
+def test_reported_tflops_reflects_miscalculated_counters():
+    exact = reported_tflops_per_gpu("deepseek-v3-671b", 2.0, 288)
+    naive = reported_tflops_per_gpu("deepseek-v3-671b", 2.0, 288,
+                                    variant="naive_moe")
+    assert naive / exact == pytest.approx(3.186, rel=1e-3)
+    assert compute_mfu(400.0, 1000.0) == pytest.approx(0.4)
+    with pytest.raises(ValueError):
+        compute_mfu(400.0, 0.0)
+    with pytest.raises(ValueError):
+        reported_tflops_per_gpu("llama3.2-3b", 0.0, 64)
+
+
+def test_client_post_mfu_accepts_sample_objects(miscalc_collector):
+    col, _, _ = miscalc_collector
+    store = FleetStore()
+    store.update_from(col)
+    agg = IngestAggregator(n_shards=1)
+    samples = [MfuSample(t_s=30.0 * (k + 1), mfu=0.35,
+                         tflops_per_gpu=350.0) for k in range(4)]
+    with FleetAPIServer(store, aggregator=agg) as server:
+        out = FleetClient(server.url).post_mfu("obj-job", samples)
+    assert out["applied"] == 4
+    stats = agg.stats()
+    assert stats["mfu_rows"] == 4 and stats["mfu_jobs"] == 1
+    # publishing folds the posted rows into the store's MFU generation
+    probe = FleetStore()
+    agg.publish(probe)
+    assert probe._mfu is not None
+    assert probe._mfu.job_mean("obj-job") == pytest.approx(0.35)

@@ -108,11 +108,11 @@ def test_paper_2p5x_scenario_scores_perfectly():
     assert a.factor == pytest.approx(2.5, rel=0.2)
 
 
-def test_scorecard_covers_three_detectors_on_all_scenarios(card):
+def test_scorecard_covers_all_detectors_on_all_scenarios(card):
     assert len(card["scenarios"]) >= 6
     for entry in card["scenarios"].values():
         assert set(entry["detectors"]) \
-            == {"regression", "divergence", "goodput"}
+            == {"regression", "divergence", "goodput", "miscalc"}
 
 
 def test_scorecard_holds_every_pinned_floor(card):
