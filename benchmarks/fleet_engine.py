@@ -552,6 +552,61 @@ def run() -> list[Row]:
         peak_resident_frac=round(resident_frac, 4),
     )
 
+    # -- codecs: ctr-v2 container compression + decode throughput ---------
+    # The always-on-recording question: what does a day of live counters
+    # cost on disk?  The fixture is DCGM-WIRE precision (activity at 3
+    # decimals, clock in whole MHz — what dcgmi/NVML actually deliver,
+    # via `quantize_wire`), because that is what a live recorder stores;
+    # full-precision f32 noise has a much higher entropy floor.  The
+    # acceptance bar is >= 15x smaller than CSV for the dbz codec.
+    from repro.telemetry.backends.fake import quantize_wire
+    from repro.telemetry.scrape import DeviceGrid as _DG
+    from repro.telemetry.tracestore import read_archive, write_archive
+
+    q_tpa, q_clk = quantize_wire(grid.tpa, grid.clock_mhz)
+    wire = _DG(INTERVAL_S, q_tpa.astype(np.float32),
+               q_clk.astype(np.float32))
+    with tempfile.TemporaryDirectory() as tmp:
+        csv_path = os.path.join(tmp, "wire.csv")
+        write_trace(wire, csv_path)
+        csv_wire_b = os.path.getsize(csv_path)
+        sizes, decode_thr = {}, {}
+        for tag, path, kw in (
+                ("v1_npz", os.path.join(tmp, "wire.ctr"), {}),
+                ("v2_raw", os.path.join(tmp, "raw.ctr2"),
+                 {"codec": "raw"}),
+                ("v2_dbz", os.path.join(tmp, "dbz.ctr2"),
+                 {"codec": "dbz"})):
+            write_trace(wire, path, chunk_samples=512, **kw)
+            sizes[tag] = archive_nbytes(path)
+            back, us_dec = timed(lambda p=path: read_archive(p), repeat=3)
+            decode_thr[tag] = n_cells / (us_dec / 1e6)
+            assert back.tpa.tobytes() == wire.tpa.tobytes(), tag
+    ratio_dbz = csv_wire_b / sizes["v2_dbz"]
+    ratio_v1 = csv_wire_b / sizes["v1_npz"]
+    assert ratio_dbz >= 15.0, (
+        f"dbz compression regressed to {ratio_dbz:.1f}x vs CSV "
+        f"(acceptance floor is 15x)")
+    rows.append(Row(
+        "fleet_engine.trace_codecs_dbz_1day",
+        n_cells / decode_thr["v2_dbz"] * 1e6,
+        f"compression={ratio_dbz:.1f}x bytes={sizes['v2_dbz']} "
+        f"decode_samples_per_s={decode_thr['v2_dbz']:.0f}"))
+    _bench(
+        "trace_codecs", round(ratio_dbz, 1), "x_vs_csv",
+        devices=n_dev_t,
+        samples=n_cells,
+        csv_bytes=csv_wire_b,
+        v1_npz_bytes=sizes["v1_npz"],
+        v2_raw_bytes=sizes["v2_raw"],
+        v2_dbz_bytes=sizes["v2_dbz"],
+        v1_compression_x=round(ratio_v1, 1),
+        dbz_compression_x=round(ratio_dbz, 1),
+        dbz_decode_samples_per_s=round(decode_thr["v2_dbz"]),
+        raw_decode_samples_per_s=round(decode_thr["v2_raw"]),
+        v1_decode_samples_per_s=round(decode_thr["v1_npz"]),
+    )
+
     # -- serving layer: store query latency + HTTP requests/s -------------
     # The 64-job fixture from the collector case, published into a
     # FleetStore and interrogated the way a dashboard fleet does: a COLD

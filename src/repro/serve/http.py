@@ -30,6 +30,9 @@ Five endpoint families (JSON in both directions except ingest blobs):
                                  `Retry-After` under shard backpressure
         GET                      aggregator counters (hosts/applied/
                                  duplicates/gaps/rejected per shard)
+    /dashboard                   the HUMAN client: one static HTML page
+                                 (`repro.serve.dashboard`) whose inline
+                                 JS polls the JSON API above
 
 Every response carries an `ETag` derived from the store GENERATION plus
 a per-process boot nonce (so validators never collide across daemon
@@ -54,6 +57,7 @@ from typing import Optional
 from urllib.parse import parse_qs, unquote, urlsplit
 
 from repro.serve.aggregator import Backpressure, SnapshotGap
+from repro.serve.dashboard import DASHBOARD_HTML
 from repro.serve.store import FleetStore
 
 
@@ -206,8 +210,22 @@ def _make_handler(store: FleetStore, aggregator=None):
             return [unquote(p) for p in path.split("/") if p] \
                 == ["v1", "mfu"]
 
+        def _send_html(self, html: str) -> None:
+            body = html.encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "text/html; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.send_header("Cache-Control", "no-cache")
+            self.end_headers()
+            self.wfile.write(body)
+
         def do_GET(self) -> None:
             sp = urlsplit(self.path)
+            # the one non-JSON route: the static dashboard page (its
+            # inline JS polls the /v1 JSON API like any other client)
+            if sp.path.rstrip("/") == "/dashboard":
+                self._send_html(DASHBOARD_HTML)
+                return
             params = {k: v[-1] for k, v in
                       parse_qs(sp.query, keep_blank_values=True).items()}
             # route BEFORE the ETag check, so an invalid path or param

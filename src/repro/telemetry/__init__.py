@@ -1,8 +1,12 @@
+from repro.telemetry.backends import (  # noqa: F401
+    DcgmFieldBackend, DcgmiTransport, FakeDcgmTransport, FakeTpuTransport,
+    FieldTransport, PynvmlTransport, TpuProfilerBackend, TransportError,
+    make_dcgm_backends,
+)
 from repro.telemetry.clock import ClockModel  # noqa: F401
 from repro.telemetry.counters import (  # noqa: F401
     MAX_HW_AVG_WINDOW_S, CounterBackend, Event, SimulatedDeviceBackend,
-    StepProfile, TpuProfilerBackend, check_scrape_interval, duty_grid,
-    event_factors,
+    StepProfile, check_scrape_interval, duty_grid, event_factors,
 )
 from repro.telemetry.mfu import (  # noqa: F401
     MfuReplaySource, MfuReporter, MfuSample, compute_mfu,

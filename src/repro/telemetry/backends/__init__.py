@@ -1,0 +1,39 @@
+"""Live counter acquisition: the deploy tier under `CounterBackend`.
+
+The paper's acquisition story is deliberately thin — OFU needs exactly
+two per-device counters (PIPE_TENSOR_ACTIVE + SM_CLOCK), polled with no
+application instrumentation.  This package is that tier:
+
+  * `transport` — the injectable `FieldTransport` seam: "read these
+    field ids for this GPU now", nothing else.  Everything above it
+    (staleness, retry, §IV-C window policy) lives in the backend;
+    everything below (dcgmi subprocess, NVML bindings, the CI fake) is a
+    transport.
+  * `dcgm` — `DcgmFieldBackend` (a `CounterBackend`: the rest of the
+    pipeline runs unchanged via `BackendSource`) plus the real
+    transports: `DcgmiTransport` (one `dcgmi dmon` snapshot per poll
+    round) and `PynvmlTransport` (NVML bindings, gated on the module
+    being installed).
+  * `fake` — `FakeDcgmTransport`/`FakeTpuTransport`, driven by the
+    simulator engine with the SAME chunk seeding as `SimulatorSource`,
+    so the full live path (transport → backend → `BackendSource` →
+    `Collector` → serve) runs deterministically in CI and its rollup is
+    bucketwise-identical to the pure-simulation path on the same seed
+    (`tools/fleet_live.py --self-check`).
+  * `tpu` — `TpuProfilerBackend` over a `TpuTransport` duty-cycle/clock
+    shim (`LibtpuTransport` for hardware, the fake for CI).
+"""
+from repro.telemetry.backends.dcgm import (  # noqa: F401
+    DcgmFieldBackend, DcgmiTransport, PynvmlTransport, make_dcgm_backends,
+    parse_dmon,
+)
+from repro.telemetry.backends.fake import (  # noqa: F401
+    FakeDcgmTransport, FakeTpuTransport,
+)
+from repro.telemetry.backends.tpu import (  # noqa: F401
+    LibtpuTransport, TpuProfilerBackend, TpuTransport,
+)
+from repro.telemetry.backends.transport import (  # noqa: F401
+    DCGM_FI_DEV_SM_CLOCK, DCGM_FI_PROF_PIPE_TENSOR_ACTIVE, FieldSample,
+    FieldTransport, TransportError,
+)

@@ -9,7 +9,8 @@
 `SimulatedDeviceBackend` generates both from a step profile (MXU-busy time
 per step + step period, derivable from a compiled dry-run) plus injected
 inefficiency events — so every downstream fleet component runs unchanged
-against real TPU counters (`TpuProfilerBackend`, deploy target).
+against real counters (`telemetry.backends`: `DcgmFieldBackend` for DCGM
+GPUs, `TpuProfilerBackend` for libtpu — the deploy tier).
 """
 from __future__ import annotations
 
@@ -120,17 +121,17 @@ class CounterBackend:
         raise NotImplementedError
 
 
-class TpuProfilerBackend(CounterBackend):
-    """Deploy target: wires libtpu duty-cycle + clock telemetry.
-
-    Not functional in this CPU container; documented wiring point.  On TPU,
-    duty cycle comes from the `tensorcore_utilization`/megacore duty-cycle
-    metric and clock from the power-management telemetry stream.
-    """
-
-    def poll(self, window_s: float):  # pragma: no cover - hardware only
-        raise RuntimeError("TpuProfilerBackend requires TPU hardware; "
-                           "use SimulatedDeviceBackend in this container")
+def __getattr__(name: str):
+    """Lazy re-export: `TpuProfilerBackend` moved to
+    `telemetry.backends.tpu` when it grew a real transport tier, but
+    its historical home (`from repro.telemetry.counters import
+    TpuProfilerBackend`) keeps working.  PEP 562 indirection instead of
+    a top-level import because `backends` imports this module — the
+    deferred lookup breaks the cycle."""
+    if name == "TpuProfilerBackend":
+        from repro.telemetry.backends.tpu import TpuProfilerBackend
+        return TpuProfilerBackend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class SimulatedDeviceBackend(CounterBackend):

@@ -41,6 +41,29 @@ TFLOPS_RE = re.compile(
     r"throughput per GPU \(TFLOP/s/GPU\):\s*([0-9]*\.?[0-9]+)")
 ELAPSED_MS_RE = re.compile(
     r"elapsed time per iteration \(ms\):\s*([0-9]*\.?[0-9]+)")
+#: leading wall-clock stamp Megatron/torchrun prepend, e.g.
+#: ``[2026-08-09 13:04:55]`` or ``2026-08-09 13:04:55,123`` — date and
+#: time with optional fractional seconds
+TIMESTAMP_RE = re.compile(
+    r"(\d{4})-(\d{2})-(\d{2})[ T](\d{2}):(\d{2}):(\d{2})(?:[.,](\d+))?")
+
+
+def extract_wall_time(line: str) -> Optional[float]:
+    """Wall-clock seconds (arbitrary absolute epoch) from a log line's
+    timestamp, or None.  Only DIFFERENCES between lines are meaningful
+    — the reporter anchors its relative clock to them."""
+    m = TIMESTAMP_RE.search(line)
+    if m is None:
+        return None
+    import datetime
+    y, mo, d, h, mi, s = (int(g) for g in m.groups()[:6])
+    frac = m.group(7)
+    us = int(round(float("0." + frac) * 1e6)) if frac else 0
+    try:
+        dt = datetime.datetime(y, mo, d, h, mi, s, us)
+    except ValueError:            # e.g. month 13: not a real timestamp
+        return None
+    return dt.timestamp()
 
 
 def compute_mfu(tflops_per_gpu: float, peak_tflops: float) -> float:
@@ -91,6 +114,17 @@ class MfuReporter:
     log with no absolute timestamps still yields a monotone sample
     series aligned with the job's relative clock (the same clock the
     simulator's scrape grid uses).
+
+    WALL-CLOCK ANCHORING: when lines carry real timestamps (Megatron
+    prepends ``[YYYY-MM-DD HH:MM:SS]``), sample times anchor to them
+    instead of the elapsed-ms accumulator — the first timestamped line
+    pins (wall time ↔ job clock) and every later timestamped sample
+    lands at `anchor + (wall - wall0)`.  Elapsed-ms only measures the
+    iteration itself, so checkpoint stalls, evals and dataloader hangs
+    silently DESYNC the accumulator from real time; the wall anchor is
+    what lets a live reporter's samples join counter buckets on
+    absolute time (the OFU↔MFU correlation join).  Untimestamped lines
+    fall back to the accumulator, re-synced at each timestamped one.
     """
 
     job_id: str
@@ -104,6 +138,8 @@ class MfuReporter:
             raise ValueError(
                 f"peak_tflops={self.peak_tflops} must be positive")
         self._clock_s = float(self.t0_s)
+        self._wall0: Optional[float] = None    # first line's wall time
+        self._anchor_s = 0.0                   # job clock at that line
 
     @classmethod
     def for_chip(cls, job_id: str, *, chip: ChipSpec = DEFAULT_CHIP,
@@ -126,8 +162,21 @@ class MfuReporter:
         rec = recs[0]
         dt = (rec["elapsed_ms"] / 1e3 if rec["elapsed_ms"] is not None
               else self.default_interval_s)
-        self._clock_s = float(t_s) if t_s is not None \
-            else self._clock_s + dt
+        wall = extract_wall_time(line)
+        if t_s is not None:
+            self._clock_s = float(t_s)
+            if wall is not None:       # explicit pin re-anchors the wall
+                self._wall0, self._anchor_s = wall, self._clock_s
+        elif wall is not None:
+            if self._wall0 is None:
+                # first timestamped line: accept the accumulator's
+                # position once, then pin wall time to it
+                self._clock_s += dt
+                self._wall0, self._anchor_s = wall, self._clock_s
+            else:
+                self._clock_s = self._anchor_s + (wall - self._wall0)
+        else:
+            self._clock_s += dt
         sample = MfuSample(
             t_s=self._clock_s,
             mfu=compute_mfu(rec["tflops_per_gpu"], self.peak_tflops),

@@ -401,8 +401,10 @@ def _resolve_fmt(path: str, fmt: str) -> str:
             f"(no {tracestore.MANIFEST_NAME}); pass fmt explicitly if "
             "this is intentional")
     low = path.lower()
-    if low.endswith(tracestore.COLUMNAR_SUFFIX):
+    if low.endswith((tracestore.COLUMNAR_SUFFIX, tracestore.V2_SUFFIX)):
         return "columnar"
+    if os.path.isfile(path) and tracestore.is_v2_archive(path):
+        return "columnar"        # suffix-less ctr-v2 file: sniff the magic
     if low.endswith(".csv"):
         return "csv"
     if low.endswith((".jsonl", ".ndjson", ".json")):
@@ -412,15 +414,19 @@ def _resolve_fmt(path: str, fmt: str) -> str:
 
 
 def write_trace(grid: DeviceGrid, path: str, *, fmt: str = "auto",
-                chunk_samples: int = tracestore.DEFAULT_CHUNK_SAMPLES
-                ) -> None:
+                chunk_samples: int = tracestore.DEFAULT_CHUNK_SAMPLES,
+                codec: Optional[str] = None) -> None:
     """Record a DeviceGrid as a replayable scrape trace (CSV, JSONL, or
-    a chunked columnar archive for `.ctr`/fmt='columnar' paths —
-    `chunk_samples` applies only there)."""
+    a chunked columnar archive for `.ctr`/`.ctr2`/fmt='columnar' paths —
+    `chunk_samples` applies only there, and `codec` only to `.ctr2`)."""
     fmt = _resolve_fmt(path, fmt)
     if fmt == "columnar":
-        tracestore.write_archive(grid, path, chunk_samples=chunk_samples)
+        tracestore.write_archive(grid, path, chunk_samples=chunk_samples,
+                                 codec=codec)
         return
+    if codec is not None:
+        raise ValueError(f"codec={codec!r} applies only to columnar "
+                         "ctr-v2 archives, not row formats")
     # bulk-convert once (tolist yields Python floats, repr-exact) instead
     # of a per-cell numpy-scalar conversion — fleet grids are millions of
     # samples and the trace writer must not dwarf the ~ms simulation

@@ -1,0 +1,316 @@
+"""Codec + ctr-v2 container properties (ISSUE 10 satellite): encode/
+decode is BIT-exact for arbitrary shapes/dtypes/values (NaN payloads,
+signed zeros, Inf included), v1<->v2 conversion through
+`tools/trace_convert.py` preserves every sample byte, and a v2 file
+truncated anywhere after its first flush still opens valid at the
+newest intact footer (the crash-mid-flush contract).
+
+Runs under real `hypothesis` when installed, the `_propcheck` fallback
+otherwise — see tests/_propcheck.py.
+"""
+import os
+import struct
+import sys
+import zlib
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+from _propcheck import given, settings, st  # noqa: E402
+
+import trace_convert  # noqa: E402
+from repro.telemetry import codecs  # noqa: E402
+from repro.telemetry import tracestore as ts  # noqa: E402
+from repro.telemetry.scrape import DeviceGrid  # noqa: E402
+from repro.telemetry.source import read_trace  # noqa: E402
+
+DTYPES = ["float32", "float64", "int32", "uint16", "int64"]
+
+#: special float bit patterns the transform must carry UNCHANGED
+SPECIALS = [np.nan, np.inf, -np.inf, -0.0, 0.0,
+            np.finfo(np.float32).tiny, np.finfo(np.float32).max]
+
+
+def _column(rng, dtype, d, s):
+    """A (d, s) column of `dtype` mixing smooth series, noise and (for
+    floats) special values — the adversarial recording."""
+    dt = np.dtype(dtype)
+    if dt.kind == "f":
+        base = np.cumsum(rng.standard_normal((d, s)), axis=1) * 0.01
+        arr = base.astype(dt)
+        n_spec = min(s * d // 4, 16)
+        if n_spec:
+            flat = arr.ravel()
+            idx = rng.choice(flat.size, size=n_spec, replace=False)
+            flat[idx] = rng.choice(SPECIALS, size=n_spec)
+        return arr
+    info = np.iinfo(dt)
+    return rng.integers(info.min, info.max, size=(d, s),
+                        endpoint=True).astype(dt)
+
+
+@settings(max_examples=60)
+@given(st.integers(min_value=1, max_value=5),
+       st.integers(min_value=0, max_value=70),
+       st.sampled_from(DTYPES),
+       st.sampled_from(codecs.codec_names()),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_codec_roundtrip_is_bit_exact(d, s, dtype, name, seed):
+    arr = _column(np.random.default_rng(seed), dtype, d, s)
+    codec = codecs.get_codec(name)
+    blob = codec.encode(arr)
+    out = codec.decode(blob, arr.dtype, arr.shape)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    # bit identity, not value closeness: NaN != NaN but its BYTES match
+    assert out.tobytes() == arr.tobytes(), (name, dtype, arr.shape)
+
+
+@settings(max_examples=40)
+@given(st.integers(min_value=0, max_value=300),
+       st.sampled_from([2, 4, 8]),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_bit_transpose_inverts(n, itemsize, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, 2 ** (8 * itemsize), size=n,
+                     dtype=f"u{itemsize}")
+    back = codecs.bit_untranspose(codecs.bit_transpose(u), n, itemsize)
+    assert back.tobytes() == u.tobytes()
+
+
+def test_codec_registry_contract():
+    assert codecs.DEFAULT_CODEC in codecs.codec_names()
+    assert codecs.get_codec(None).name == codecs.DEFAULT_CODEC
+    assert codecs.get_codec("auto").name == codecs.DEFAULT_CODEC
+    assert codecs.get_codec("dbz").name.startswith("dbz-")
+    with pytest.raises(ValueError, match="unknown codec"):
+        codecs.get_codec("lz4-fantasy")
+    if not codecs.HAVE_ZSTD:
+        with pytest.raises(ValueError, match="zstandard"):
+            codecs.get_codec("dbz-zstd")
+        with pytest.raises(ValueError, match="zstandard"):
+            codecs.DeltaBitshuffleCodec("zstd")
+    with pytest.raises(ValueError, match="codec supports"):
+        codecs.get_codec("dbz-zlib").encode(
+            np.zeros((2, 3), dtype=np.uint8))
+
+
+def _grid(seed=5, d=3, s=137, dtype=np.float32, interval=30.0, t0=0.0):
+    rng = np.random.default_rng(seed)
+    clk = rng.uniform(900.0, 1500.0, size=(d, s)).astype(dtype)
+    return DeviceGrid(interval, _column(rng, dtype, d, s), clk, t0_s=t0)
+
+
+@settings(max_examples=12)
+@given(st.sampled_from(codecs.codec_names()),
+       st.integers(min_value=1, max_value=64),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_v2_archive_roundtrip_any_codec_and_chunking(name, chunk, seed):
+    import tempfile
+    grid = _grid(seed=seed, s=1 + seed % 150)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "a.ctr2")
+        ts.write_archive(grid, path, chunk_samples=chunk, codec=name)
+        back = ts.read_archive(path)
+    assert back.tpa.tobytes() == grid.tpa.tobytes()
+    assert back.clock_mhz.tobytes() == grid.clock_mhz.tobytes()
+    assert back.interval_s == grid.interval_s and back.t0_s == grid.t0_s
+
+
+def test_v1_v2_conversion_is_byte_exact_via_trace_convert(tmp_path):
+    """csv -> v1 -> v2 -> v1 through the CLI-level convert(): every hop
+    must carry the same sample bytes (float64 once CSV parses them)."""
+    grid = _grid(seed=9, s=101, dtype=np.float64)
+    csv = str(tmp_path / "t.csv")
+    v1 = str(tmp_path / "t.ctr")
+    v2 = str(tmp_path / "t.ctr2")
+    v1b = str(tmp_path / "back.ctr")
+    trace_convert.write_trace(grid, csv)
+    trace_convert.convert(csv, v1, chunk_samples=40)
+    trace_convert.convert(v1, v2, chunk_samples=23, codec="dbz")
+    trace_convert.convert(v2, v1b, chunk_samples=64)
+    a1, a2, a1b = read_trace(v1), read_trace(v2), read_trace(v1b)
+    assert a1.tpa.tobytes() == a2.tpa.tobytes() == a1b.tpa.tobytes()
+    assert a1.clock_mhz.tobytes() == a2.clock_mhz.tobytes() \
+        == a1b.clock_mhz.tobytes()
+    assert a1.t0_s == a2.t0_s == a1b.t0_s
+    assert a1.interval_s == a2.interval_s == a1b.interval_s
+    # v1 refuses a codec: it has exactly one encoding
+    with pytest.raises(ValueError, match="ctr-v2 feature"):
+        trace_convert.convert(csv, str(tmp_path / "x.ctr"),
+                              chunk_samples=40, codec="raw")
+
+
+def test_v2_crash_mid_flush_opens_valid_at_last_footer(tmp_path):
+    """Truncate the file at EVERY byte position after the first flush:
+    the reader must either open with all first-flush samples intact or
+    (only while the first footer itself is torn) refuse loudly."""
+    path = str(tmp_path / "crash.ctr2")
+    g1 = _grid(seed=1, s=32, interval=30.0)
+    with ts.TraceWriterV2(path, 30.0, 3, chunk_samples=16,
+                          codec="dbz-zlib") as w:
+        w.append(g1.tpa, g1.clock_mhz)
+    flush1_end = os.path.getsize(path)
+    base = ts.read_archive(path)
+    # now a second flush that a crash will tear
+    g2 = _grid(seed=2, s=48, interval=30.0, t0=base.times_s[-1])
+    with ts.TraceWriterV2(path, 30.0, 3, chunk_samples=16,
+                          append=True, codec="raw") as w:
+        w.append_grid(g2)
+    full = os.path.getsize(path)
+    blob = open(path, "rb").read()
+    assert full > flush1_end
+
+    step = 7            # every 7th cut point keeps the test fast
+    for cut in range(flush1_end, full, step):
+        torn = str(tmp_path / "torn.ctr2")
+        with open(torn, "wb") as fh:
+            fh.write(blob[:cut])
+        rd = ts.TraceReaderV2(torn)
+        try:
+            assert rd.footer_end <= cut
+            assert rd.n_samples >= 32     # never loses flushed data
+            grid = rd.read_all()
+        finally:
+            rd.close()
+        assert grid.tpa[:, :32].tobytes() == base.tpa.tobytes()
+    # the untorn file serves both flushes
+    whole = ts.read_archive(path)
+    assert whole.n_devices == 3 and whole.tpa.shape[1] == 80
+    assert whole.tpa[:, 32:].tobytes() == g2.tpa.tobytes()
+
+
+def test_v2_append_reopen_truncates_unindexed_tail(tmp_path):
+    path = str(tmp_path / "resume.ctr2")
+    g1 = _grid(seed=3, s=20, interval=10.0)
+    with ts.TraceWriterV2(path, 10.0, 3, chunk_samples=8) as w:
+        w.append(g1.tpa, g1.clock_mhz)
+    durable = os.path.getsize(path)
+    # a crashed writer's unindexed garbage after the last footer
+    with open(path, "ab") as fh:
+        fh.write(b"\x00garbage torn chunk bytes" * 9)
+    g2 = _grid(seed=4, s=12, interval=10.0, t0=200.0)
+    with ts.TraceWriterV2(path, 10.0, 3, chunk_samples=8,
+                          append=True) as w:
+        assert os.path.getsize(path) == durable   # tail dropped
+        w.append_grid(g2)
+    out = ts.read_archive(path)
+    assert out.tpa.shape == (3, 32)
+    assert out.tpa[:, :20].tobytes() == g1.tpa.tobytes()
+    assert out.tpa[:, 20:].tobytes() == g2.tpa.tobytes()
+
+
+def test_v2_truncated_before_first_footer_fails_loudly(tmp_path):
+    path = str(tmp_path / "dead.ctr2")
+    g = _grid(seed=6, s=8)
+    with ts.TraceWriterV2(path, 30.0, 3, chunk_samples=4) as w:
+        w.append(g.tpa, g.clock_mhz)
+    # find where the first footer STARTS and cut inside the header/data
+    blob = open(path, "rb").read()
+    first_magic = blob.index(ts.V2_FOOTER_MAGIC)
+    flen = struct.unpack("<Q", blob[first_magic - 8:first_magic])[0]
+    footer_start = first_magic + len(ts.V2_FOOTER_MAGIC) \
+        - ts._V2_TAIL - flen
+    with open(path, "wb") as fh:
+        fh.write(blob[:footer_start + 3])
+    with pytest.raises(ValueError, match="no intact footer"):
+        ts.TraceReaderV2(path)
+
+
+def test_v2_reader_residency_stays_per_chunk(tmp_path):
+    """The O(chunk) memory contract holds for the mmap'd container just
+    as it does for v1 directories."""
+    path = str(tmp_path / "big.ctr2")
+    grid = _grid(seed=8, d=4, s=400)
+    ts.write_archive(grid, path, chunk_samples=50, codec="dbz-zlib")
+    rd = ts.TraceReaderV2(path)
+    try:
+        for k in range(0, 400, 37):
+            rd.read_samples(k, min(k + 30, 400))
+        assert rd.peak_resident_samples <= 2 * 50 * 4
+        assert rd.chunks_decoded >= 8
+        # a mid-archive read touches only its spanning chunks
+        before = rd.chunks_decoded
+        rd.read_samples(55, 60)
+        assert rd.chunks_decoded <= before + 1
+    finally:
+        rd.close()
+
+
+def _flip_last_footer_bit(path):
+    blob = bytearray(open(path, "rb").read())
+    tail = len(blob) - ts._V2_TAIL
+    flen = struct.unpack("<Q", blob[tail + 4:tail + 12])[0]
+    blob[tail - flen + 5] ^= 0x40
+    with open(path, "wb") as fh:
+        fh.write(blob)
+
+
+def test_v2_footer_crc_rejects_bitrot(tmp_path):
+    # s < chunk_samples: the ONLY footer is the close() one — bitrot in
+    # its json must fail the crc and, with nothing to fall back to,
+    # refuse loudly
+    path = str(tmp_path / "rot.ctr2")
+    g = _grid(seed=10, s=5)
+    ts.write_archive(g, path, chunk_samples=8, codec="raw")
+    _flip_last_footer_bit(path)
+    with pytest.raises(ValueError, match="intact footer"):
+        ts.TraceReaderV2(path)
+
+    # s == chunk_samples: append() committed an EARLIER cumulative
+    # footer indexing the same chunk, so bitrot in the newest one falls
+    # back instead of losing the archive
+    path2 = str(tmp_path / "rot2.ctr2")
+    g2 = _grid(seed=10, s=8)
+    ts.write_archive(g2, path2, chunk_samples=8, codec="raw")
+    _flip_last_footer_bit(path2)
+    out = ts.read_archive(path2)
+    assert out.tpa.tobytes() == g2.tpa.tobytes()
+
+
+def test_dbz_beats_zlib_on_wire_precision_counters(tmp_path):
+    """The reason dbz exists: on DCGM-wire-precision counters the
+    delta+bitshuffle transform must beat plain DEFLATE, and both must
+    beat raw."""
+    from repro.telemetry.backends.fake import quantize_wire
+    from repro.telemetry.counters import StepProfile
+    from repro.telemetry.source import SimulatorSource
+
+    src = SimulatorSource(
+        profile=StepProfile(mxu_time_s=0.84, step_time_s=2.0),
+        duration_s=6 * 3600.0, interval_s=30.0, n_devices=4, seed=11)
+    grid = src.poll(6 * 3600.0)
+    tpa, clk = quantize_wire(grid.tpa, grid.clock_mhz)
+    wire = DeviceGrid(30.0, tpa.astype(np.float32),
+                      clk.astype(np.float32))
+    sizes = {}
+    for name in ("raw", "zlib", "dbz-zlib"):
+        p = str(tmp_path / f"{name}.ctr2")
+        ts.write_archive(wire, p, chunk_samples=512, codec=name)
+        sizes[name] = os.path.getsize(p)
+        back = ts.read_archive(p)
+        assert back.tpa.tobytes() == wire.tpa.tobytes()
+    assert sizes["dbz-zlib"] < sizes["zlib"] < sizes["raw"], sizes
+
+
+def test_mixed_codec_archive_reads_transparently(tmp_path):
+    path = str(tmp_path / "mixed.ctr2")
+    g1 = _grid(seed=12, s=16, interval=30.0)
+    with ts.TraceWriterV2(path, 30.0, 3, chunk_samples=8,
+                          codec="raw") as w:
+        w.append(g1.tpa, g1.clock_mhz)
+    g2 = _grid(seed=13, s=16, interval=30.0, t0=16 * 30.0)
+    with ts.TraceWriterV2(path, 30.0, 3, chunk_samples=8, append=True,
+                          codec="dbz-zlib") as w:
+        w.append_grid(g2)
+    rd = ts.TraceReaderV2(path)
+    try:
+        assert sorted({c.codec for c in rd.chunks}) \
+            == ["dbz-zlib", "raw"]
+        assert "codecs=dbz-zlib,raw" in rd.summary()
+        out = rd.read_all()
+    finally:
+        rd.close()
+    assert out.tpa.tobytes() == np.concatenate(
+        [g1.tpa, g2.tpa], axis=1).tobytes()

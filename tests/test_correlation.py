@@ -442,6 +442,37 @@ def test_reporter_clock_follows_elapsed_ms():
     assert t.tolist() == [100.0] and src.exhausted
 
 
+def test_reporter_anchors_to_log_wall_clock():
+    """Timestamped Megatron lines pin sample times to REAL wall time:
+    a checkpoint stall between iterations (elapsed-ms never sees it)
+    must not desync the samples from absolute time."""
+    stamped = "[2026-08-09 {hms}] " + MEGATRON_LINE
+    rep = MfuReporter("j", peak_tflops=1000.0)
+    out = rep.feed_log([
+        # first stamped line: accumulator position accepted, wall pinned
+        stamped.format(hms="13:00:02", it=1, ms="2000.0", tfl="400.0"),
+        # 58 wall seconds later — a stall ate ~55s the elapsed-ms field
+        # (3000ms) never recorded
+        stamped.format(hms="13:01:00", it=2, ms="3000.0", tfl="500.0")])
+    assert [s.t_s for s in out] == [2.0, 60.0]   # wall delta, not 2+3
+    # untimestamped lines fall back to the accumulator FROM the anchor
+    s3 = rep.feed(MEGATRON_LINE.format(it=3, ms="2500.0", tfl="450.0"))
+    assert s3.t_s == pytest.approx(62.5)
+    # the next stamped line re-syncs onto the wall anchor
+    s4 = rep.feed("2026-08-09 13:01:30,500 " + MEGATRON_LINE.format(
+        it=4, ms="2000.0", tfl="480.0"))
+    assert s4.t_s == pytest.approx(2.0 + 88.5)
+    # a garbage almost-timestamp is not a timestamp
+    from repro.telemetry.mfu import extract_wall_time
+    assert extract_wall_time("2026-13-40 99:99:99 oops") is None
+    # an un-stamped log behaves exactly as before (accumulator only)
+    plain = MfuReporter("j", peak_tflops=1000.0)
+    outs = plain.feed_log([
+        MEGATRON_LINE.format(it=1, ms="2000.0", tfl="400.0"),
+        MEGATRON_LINE.format(it=2, ms="3000.0", tfl="500.0")])
+    assert [s.t_s for s in outs] == [2.0, 5.0]
+
+
 def test_replay_source_poll_contract():
     src = MfuReplaySource.constant(0.4, duration_s=300.0, interval_s=30.0)
     assert src.t_s.size == 10 and src.t_s[0] == 30.0

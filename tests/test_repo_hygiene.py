@@ -1,0 +1,43 @@
+"""Repository hygiene: bytecode caches must never be tracked.
+
+PR 3 purged a committed `__pycache__/`; this is the regression guard
+(the same check runs as a dedicated CI step, so a reintroduction fails
+the build even if the test suite is skipped).  Runs against `git
+ls-files` — the INDEX, not the working tree — because on-disk caches
+are normal runtime artifacts that `.gitignore` already hides.
+"""
+import os
+import subprocess
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tracked_files():
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=REPO,
+                             capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    return out.stdout.splitlines()
+
+
+def test_no_bytecode_tracked():
+    offenders = [f for f in _tracked_files()
+                 if "__pycache__" in f.split(os.sep)
+                 or "__pycache__" in f.split("/")
+                 or f.endswith((".pyc", ".pyo"))]
+    assert not offenders, (
+        f"bytecode artifacts are tracked: {offenders[:10]} — "
+        "git rm -r --cached them; .gitignore already excludes them")
+
+
+def test_gitignore_excludes_bytecode():
+    with open(os.path.join(REPO, ".gitignore")) as fh:
+        patterns = [ln.strip() for ln in fh if ln.strip()
+                    and not ln.startswith("#")]
+    assert "__pycache__/" in patterns
+    assert any(p in ("*.py[cod]", "*.pyc") for p in patterns)

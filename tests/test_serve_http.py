@@ -250,3 +250,29 @@ def test_jobs_listing_and_divergence_over_http(served):
     gp = client.goodput(healthy_ofu=0.5)
     assert gp["healthy_ofu"] == 0.5
     assert gp["jobs"][0]["job_id"] == "regressed"   # biggest waste pool
+
+
+def test_dashboard_page_serves_well_formed_html(served):
+    import urllib.request
+
+    daemon, server = served
+    daemon.run(n_rounds=1)
+    for path in ("/dashboard", "/dashboard/"):
+        with urllib.request.urlopen(server.url + path,
+                                    timeout=10) as resp:
+            assert resp.status == 200
+            ctype = resp.headers.get("Content-Type", "")
+            assert ctype.startswith("text/html")
+            body = resp.read().decode()
+        assert int(resp.headers["Content-Length"]) == \
+            len(body.encode())
+    # well-formed enough for a browser: doctype, matched document
+    # tags, and the JS actually polls the JSON API it claims to
+    assert body.lstrip().startswith("<!DOCTYPE html>")
+    for tag in ("html", "head", "body", "script", "svg", "table"):
+        assert body.count(f"<{tag}") == body.count(f"</{tag}>"), tag
+    assert "/v1/query?kind=series&scope=fleet" in body
+    assert "/v1/query?kind=top_regressions" in body
+    assert "/v1/alerts" in body
+    # the JSON API's path space is untouched by the HTML route
+    assert FleetClient(server.url).fleet()["scope"] == "fleet"

@@ -46,7 +46,7 @@ def _gold_grid() -> DeviceGrid:
 
 
 @pytest.mark.parametrize("name", ["golden.csv", "golden.jsonl",
-                                  "golden.ctr"])
+                                  "golden.ctr", "golden.ctr2"])
 def test_golden_reads_are_exact(name):
     grid = read_trace(os.path.join(DATA, name))
     assert grid.interval_s == GOLD_IV
@@ -95,8 +95,76 @@ def test_golden_archive_layout_is_frozen():
         assert grid.t0_s == GOLD_T0 + lo * GOLD_IV
 
 
+def test_golden_v2_container_is_frozen(tmp_path):
+    """The ctr-v2 single-file layout is part of the wire contract.
+
+    `tests/data/golden.ctr2` was written once with the raw codec (whose
+    encoding is deterministic native bytes, unlike zlib streams which
+    may vary across library versions), so a re-write of the golden grid
+    must reproduce the committed file BYTE for byte — magic, header
+    json, chunk blocks, both cumulative footers, crcs and all.
+
+    Regenerate (only after a deliberate, versioned format change):
+
+        PYTHONPATH=src python tools/trace_convert.py \\
+            tests/data/golden.csv tests/data/golden.ctr2 \\
+            --chunk-samples 2 --codec raw
+    """
+    import struct
+
+    from repro.telemetry import tracestore as ts
+
+    fixture = os.path.join(DATA, "golden.ctr2")
+    with open(fixture, "rb") as fh:
+        blob = fh.read()
+
+    # the immutable prelude: magic + header length + header json
+    assert blob[:8] == ts.V2_MAGIC == b"CTR2\x00\x01\r\n"
+    hlen = struct.unpack("<I", blob[8:12])[0]
+    assert json.loads(blob[12:12 + hlen]) == {
+        "format": "ctr-v2", "interval_s": 30.0, "n_devices": 2,
+        "t0_s": 600.0, "chunk_samples": 2}
+
+    # the newest footer: crc-guarded cumulative chunk table at EOF
+    assert blob.endswith(ts.V2_FOOTER_MAGIC)
+    tail = len(blob) - ts._V2_TAIL
+    flen = struct.unpack("<Q", blob[tail + 4:tail + 12])[0]
+    footer = json.loads(blob[tail - flen:tail])
+    assert footer == {
+        "format": "ctr-v2", "interval_s": 30.0, "n_devices": 2,
+        "t0_s": 600.0, "dtype": "float64", "chunk_samples": 2,
+        "n_samples": 5,
+        "chunks": [
+            {"off": 94, "t0_s": 600.0, "n": 2, "codec": "raw",
+             "tb": 32, "cb": 32},
+            {"off": 158, "t0_s": 660.0, "n": 2, "codec": "raw",
+             "tb": 32, "cb": 32},
+            {"off": 488, "t0_s": 720.0, "n": 1, "codec": "raw",
+             "tb": 16, "cb": 16},
+        ],
+    }
+
+    # writing the same grid again is byte-identical to the fixture
+    out = tmp_path / "golden.ctr2"
+    ts.write_archive(_gold_grid(), str(out), chunk_samples=2,
+                     codec="raw")
+    assert out.read_bytes() == blob
+
+    # and the chunk contract reads back through the shared reader API
+    rd = TraceReader(fixture)
+    try:
+        assert [c.n_samples for c in rd.chunks] == [2, 2, 1]
+        for k, grid in enumerate(rd.iter_chunks()):
+            lo = 2 * k
+            np.testing.assert_array_equal(grid.tpa,
+                                          GOLD_TPA[:, lo:lo + 2])
+            assert grid.t0_s == GOLD_T0 + lo * GOLD_IV
+    finally:
+        rd.close()
+
+
 @pytest.mark.parametrize("name", ["golden.csv", "golden.jsonl",
-                                  "golden.ctr"])
+                                  "golden.ctr", "golden.ctr2"])
 def test_golden_bucket_readout_is_frozen(name):
     """Bucketing semantics ride the same golden contract: the fixture
     through a bucket_s=60 rollup must land these exact buckets."""

@@ -1,18 +1,24 @@
 #!/usr/bin/env python
 """Convert scrape traces between CSV / JSONL (interchange) and the
-chunked columnar archive format (`repro.telemetry.tracestore`), with a
-stats summary for sizing archives.
+columnar archive formats (`repro.telemetry.tracestore`): the ctr-v1
+chunk directory and the ctr-v2 single-file container, with a stats
+summary for sizing archives.
 
     PYTHONPATH=src python tools/trace_convert.py fleet.csv fleet.ctr \
         --chunk-samples 4096
-    PYTHONPATH=src python tools/trace_convert.py fleet.ctr fleet.jsonl
+    PYTHONPATH=src python tools/trace_convert.py fleet.ctr fleet.ctr2 \
+        --codec dbz-zlib
+    PYTHONPATH=src python tools/trace_convert.py fleet.ctr2 fleet.jsonl
     PYTHONPATH=src python tools/trace_convert.py --self-check
 
 Formats are inferred from the path (`.csv`, `.jsonl`/`.ndjson`/`.json`,
-`.ctr` or an existing archive directory) unless forced with
-`--from/--to`.  `--self-check` round-trips a synthetic trace through all
-three formats in a temp dir and verifies exact equality plus chunked
-replay — the CI smoke test for the storage layer.
+`.ctr` directory or `.ctr2` file — an existing archive of either
+version is sniffed regardless of suffix) unless forced with
+`--from/--to`.  `--codec` selects the ctr-v2 column codec (see
+`repro.telemetry.codecs`; v1 output is always npz).  `--self-check`
+round-trips a synthetic trace through all formats in a temp dir and
+verifies exact equality plus chunked replay — the CI smoke test for
+the storage layer.
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ except ImportError:                        # ran without PYTHONPATH=src
 
 import numpy as np
 
-from repro.telemetry import tracestore
+from repro.telemetry import codecs, tracestore
 from repro.telemetry.source import _resolve_fmt, read_trace, write_trace
 
 
@@ -51,9 +57,11 @@ def _describe(tag: str, path: str, grid) -> None:
 
 def convert(src: str, dst: str, *, src_fmt: str = "auto",
             dst_fmt: str = "auto", chunk_samples: int,
-            interval_s: float | None = None) -> None:
+            interval_s: float | None = None,
+            codec: str | None = None) -> None:
     grid = read_trace(src, fmt=src_fmt, interval_s=interval_s)
-    write_trace(grid, dst, fmt=dst_fmt, chunk_samples=chunk_samples)
+    write_trace(grid, dst, fmt=dst_fmt, chunk_samples=chunk_samples,
+                codec=codec)
     _describe("in ", src, grid)
     _describe("out", dst, grid)
     ratio = _nbytes(src) / max(_nbytes(dst), 1)
@@ -79,16 +87,22 @@ def self_check() -> int:
     with tempfile.TemporaryDirectory() as tmp:
         csv = os.path.join(tmp, "t.csv")
         ctr = os.path.join(tmp, "t.ctr")
+        ctr2 = os.path.join(tmp, "t.ctr2")
         jsonl = os.path.join(tmp, "t.jsonl")
         write_trace(grid, csv)
         convert(csv, ctr, chunk_samples=8)
-        convert(ctr, jsonl, chunk_samples=8)
+        convert(ctr, ctr2, chunk_samples=8)
+        convert(ctr2, jsonl, chunk_samples=8)
         a = read_trace(ctr)
+        a2 = read_trace(ctr2)
         b = read_trace(jsonl)
         np.testing.assert_array_equal(a.tpa, grid.tpa)
         np.testing.assert_array_equal(a.clock_mhz, grid.clock_mhz)
+        # v1 -> v2 conversion is bit-exact, not just value-equal
+        assert a2.tpa.tobytes() == a.tpa.tobytes()
+        assert a2.clock_mhz.tobytes() == a.clock_mhz.tobytes()
         np.testing.assert_array_equal(b.tpa, grid.tpa.astype(np.float64))
-        assert a.t0_s == b.t0_s == 600.0
+        assert a.t0_s == a2.t0_s == b.t0_s == 600.0
         # chunked replay covers every sample exactly once
         src = TraceReplaySource(ctr)
         parts = []
@@ -99,8 +113,8 @@ def self_check() -> int:
         np.testing.assert_array_equal(np.concatenate(parts, axis=1),
                                       grid.tpa)
         assert src.reader.peak_resident_samples < grid.tpa.size
-    print("SELF-CHECK OK: csv -> ctr -> jsonl exact, chunked replay "
-          "complete, peak residency O(chunk)")
+    print("SELF-CHECK OK: csv -> ctr -> ctr2 -> jsonl exact, chunked "
+          "replay complete, peak residency O(chunk)")
     return 0
 
 
@@ -118,6 +132,10 @@ def main(argv=None) -> int:
                     "only; default %(default)s)")
     ap.add_argument("--interval-s", type=float, default=None,
                     help="scrape interval for single-poll row traces")
+    ap.add_argument("--codec", default=None,
+                    choices=[None, "auto"] + codecs.codec_names(),
+                    help="ctr-v2 column codec (default: auto — "
+                    f"{codecs.DEFAULT_CODEC}; .ctr2 output only)")
     ap.add_argument("--self-check", action="store_true",
                     help="round-trip a synthetic trace through all "
                     "formats and exit (CI smoke test)")
@@ -128,7 +146,7 @@ def main(argv=None) -> int:
         ap.error("src and dst are required (or pass --self-check)")
     convert(args.src, args.dst, src_fmt=args.src_fmt,
             dst_fmt=args.dst_fmt, chunk_samples=args.chunk_samples,
-            interval_s=args.interval_s)
+            interval_s=args.interval_s, codec=args.codec)
     return 0
 
 
